@@ -1,0 +1,120 @@
+"""Shared harness for the paper-table benchmarks.
+
+Each ``tableN_*.py`` reproduces the *shape of result* of one paper
+table on the synthetic federated tasks (offline container — DESIGN.md
+§7), with the same protocol knobs: non-iid Dirichlet split, 5% (here
+configurable) attendance, sample-wise test split, seeds {0..k}.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import make_algorithm
+from repro.core.cyclesl import CycleConfig
+from repro.core.drift import GradStabilityTracker
+from repro.core.split import make_stage_task
+from repro.data.federated import FederatedDataset, sample_cohort
+from repro.data.synthetic import SyntheticImageTask
+from repro.launch.train import evaluate
+from repro.models.cnn import femnist_cnn, resnet9
+from repro.optim import adam
+
+
+@dataclass
+class BenchConfig:
+    algos: tuple = ("psl", "sglr", "sflv1", "sflv2",
+                    "cyclepsl", "cyclesglr", "cyclesfl")
+    rounds: int = 150
+    n_clients: int = 100
+    attendance: float = 0.15
+    batch: int = 16
+    lr: float = 3e-4
+    alpha: float = 0.3
+    width: int = 8
+    cut: int = 2
+    seeds: tuple = (0, 1)
+    server_epochs: int = 1
+    n_classes_: int = 20            # harder task; avoids per-client saturation
+    style_scale: float = 0.3        # mild feature shift (paper: label skew)
+    noise: float = 0.5
+    samples_per_client: int = 48
+    # server-side minibatch for the CycleSL inner loop (paper §3.1: the
+    # standalone server task may use its own hyper-parameters; a larger
+    # batch = fewer, stabler Adam steps per round — see EXPERIMENTS.md)
+    server_batch: int = 64
+    model: str = "femnist"          # femnist | resnet9
+    n_classes: int = 20
+    eval_every: int = 10
+    threshold: float = 0.4          # rounds-to-accuracy threshold (Table 14)
+
+
+def build(bc: BenchConfig, seed: int):
+    gen = SyntheticImageTask(n_clients=bc.n_clients, alpha=bc.alpha,
+                             seed=seed, n_classes=bc.n_classes,
+                             img=28 if bc.model == "femnist" else 32,
+                             channels=1 if bc.model == "femnist" else 3,
+                             style_scale=bc.style_scale, noise=bc.noise,
+                             samples_per_client=bc.samples_per_client)
+    x, y, _, idx = gen.build()
+    if bc.model == "femnist":
+        model = femnist_cnn(n_classes=bc.n_classes, width=bc.width)
+    else:
+        model = resnet9(n_classes=bc.n_classes, width=bc.width)
+    task = make_stage_task(model, cut=bc.cut, kind="xent")
+    fed = FederatedDataset.from_arrays(x, y, idx, seed=seed)
+    return task, fed
+
+
+def run_algo(bc: BenchConfig, algo_name: str, seed: int,
+             collect_timing: bool = False) -> dict:
+    task, fed = build(bc, seed)
+    algo = make_algorithm(algo_name, task, adam(bc.lr), adam(bc.lr),
+                          CycleConfig(server_epochs=bc.server_epochs,
+                                      server_batch=bc.server_batch))
+    state = algo.init(jax.random.PRNGKey(seed), fed.n_clients)
+    rng = np.random.default_rng(seed + 1)
+    tracker = GradStabilityTracker()
+    accs, losses = [], []
+    rounds_to_threshold = None
+    server_time = 0.0
+    for rnd in range(bc.rounds):
+        cohort = sample_cohort(fed.n_clients, bc.attendance, rng, min_cohort=2)
+        xs = np.stack([fed.clients[c].sample_batch(rng, bc.batch)[0]
+                       for c in cohort])
+        ys = np.stack([fed.clients[c].sample_batch(rng, bc.batch)[1]
+                       for c in cohort])
+        t0 = time.time()
+        state, metrics = algo.round(state, jnp.asarray(cohort),
+                                    jnp.asarray(xs), jnp.asarray(ys),
+                                    jax.random.PRNGKey(seed * 7919 + rnd))
+        if collect_timing:
+            jax.block_until_ready(metrics["server_loss"])
+            if rnd > 0:          # skip compile round
+                server_time += time.time() - t0
+        tracker.update(metrics)
+        if (rnd + 1) % bc.eval_every == 0 or rnd == bc.rounds - 1:
+            loss, mets = evaluate(task, state, fed)
+            accs.append(mets["accuracy"])
+            losses.append(loss)
+            if rounds_to_threshold is None and mets["accuracy"] >= bc.threshold:
+                rounds_to_threshold = rnd + 1
+    return {
+        "algo": algo_name, "seed": seed,
+        "final_acc": accs[-1], "best_acc": max(accs),
+        "final_loss": losses[-1],
+        "rounds_to_threshold": rounds_to_threshold,
+        "grad_stability": tracker.summary(),
+        "round_time_s": server_time / max(1, bc.rounds - 1),
+    }
+
+
+def aggregate(results: list[dict], key: str) -> tuple[float, float]:
+    vals = [r[key] for r in results if r[key] is not None]
+    if not vals:
+        return float("nan"), float("nan")
+    return float(np.mean(vals)), float(np.std(vals))

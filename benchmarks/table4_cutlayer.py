@@ -1,0 +1,39 @@
+"""Paper Table 4 analog: impact of the cut layer on CycleSFL accuracy
+(ResNet9, 6 possible block-wise cut positions).
+
+Paper claim validated: shallower cuts perform better for CycleSL —
+client-side complexity is where drift lives, so a smaller client part
+converges better.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import BenchConfig, aggregate, run_algo
+
+
+def run(cuts=(1, 2, 3, 4, 5, 6), bc: BenchConfig | None = None) -> dict:
+    base = bc or BenchConfig(model="resnet9", width=8, rounds=40,
+                             n_classes=10, seeds=(0,))
+    table = {}
+    for cut in cuts:
+        runs = [run_algo(base.__class__(**{**base.__dict__, "cut": cut}),
+                         "cyclesfl", s) for s in base.seeds]
+        m, s = aggregate(runs, "final_acc")
+        table[cut] = {"acc_mean": m, "acc_std": s}
+    accs = [table[c]["acc_mean"] for c in cuts]
+    return {"table": table,
+            "claims": {"shallow_beats_deep": accs[0] > accs[-1]}}
+
+
+def main(fast: bool = False):
+    cuts = (1, 3, 6) if fast else (1, 2, 3, 4, 5, 6)
+    bc = BenchConfig(model="resnet9", width=8, n_classes=10,
+                     rounds=25 if fast else 40, seeds=(0,))
+    out = run(cuts, bc)
+    print(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint.io import save_checkpoint, load_checkpoint, latest_step

@@ -1,0 +1,78 @@
+"""Pytree checkpointing: flat-path .npz payload + JSON manifest.
+
+Layout:  <dir>/step_<n>/arrays.npz  +  <dir>/step_<n>/manifest.json
+The manifest stores the flattened key paths and scalar metadata, so a
+checkpoint round-trips to an *identical* tree structure (dict/list/
+NamedTuple nesting is re-assembled from the paths of a template tree,
+or from plain nested dicts when no template is given).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+
+import jax
+import numpy as np
+
+from repro.utils.tree import path_str
+
+_STEP_RE = re.compile(r"step_(\d+)$")
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {path_str(kp): np.asarray(v) for kp, v in flat}, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: dict | None = None,
+                    keep: int = 3) -> str:
+    out = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = out + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat, _ = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "paths": sorted(flat),
+                   "metadata": metadata or {}}, f, indent=2)
+    if os.path.exists(out):
+        shutil.rmtree(out)
+    os.rename(tmp, out)
+    _gc(ckpt_dir, keep)
+    return out
+
+
+def load_checkpoint(ckpt_dir: str, template, step: int | None = None):
+    """Restore into the structure of ``template`` (arbitrary pytree)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, tmpl_leaf in flat:
+        key = path_str(kp)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        leaves.append(jax.numpy.asarray(arr, dtype=tmpl_leaf.dtype)
+                      if hasattr(tmpl_leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := _STEP_RE.search(d))]
+    return max(steps) if steps else None
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted([int(m.group(1)) for d in os.listdir(ckpt_dir)
+                    if (m := _STEP_RE.search(d))])
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)

@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    ArchConfig,
+    AttnConfig,
+    MoEConfig,
+    SSMConfig,
+    InputShape,
+    INPUT_SHAPES,
+)
+from repro.configs.registry import get_config, list_archs, smoke_config

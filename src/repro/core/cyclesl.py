@@ -1,0 +1,141 @@
+"""CycleSL round — paper Algorithm 1, as one pure (jit-able) function.
+
+The round is the paper's contribution verbatim:
+
+  1. clients extract features        B_i^f = θ_C_i(B_i^x)      (parallel)
+  2. server pools a feature dataset  D_S^f = ⨄ B_i^f           (Eq. 3)
+  3. server trains E epochs on resampled shuffled mini-batches  (Eq. 3)
+  4. server FREEZES θ_S^{t+1} and computes feature gradients
+     B_i^g = ∇_{B_i^f} L(θ_S^{t+1}(B_i^f))                     (Eq. 5)
+  5. clients pull B_i^g through their local VJP and step        (Eq. 5)
+
+Step 4 uses the *updated* server (the cyclical/BCD part) and
+``stop_gradient`` walls guarantee no server parameter traces gradients
+during the client phase — the memory argument of paper §5.2.
+
+SGLR integration (CycleSGLR): feature gradients are averaged over the
+cohort before being returned, and client/server learning rates are
+decoupled (both handled by the caller via ``CycleConfig``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.feature_store import FeatureStore, gather_batch, resample_plan
+from repro.core.protocol import EntityState, entity_step
+from repro.core.split import SplitTask
+from repro.optim import Optimizer
+
+
+@dataclass(frozen=True)
+class CycleConfig:
+    server_epochs: int = 1          # E in Algorithm 1 (Table 5 ablation)
+    server_batch: Optional[int] = None  # default: the client batch size b
+    # cap on resampled minibatch STEPS per epoch (None = full coverage of
+    # D_S^f).  Algorithm 1's inner loop reads as one resampled batch per
+    # server epoch; server_steps=1 gives that literal variant, None gives
+    # the epoch reading implied by the paper's Table 8 server cost.
+    server_steps: Optional[int] = None
+    avg_client_grads: bool = False  # CycleSGLR: SGLR-style grad averaging
+    grad_clip: Optional[float] = None
+    # optional sharding hook applied to every resampled server batch
+    # (features, labels) — the launcher injects a with_sharding_constraint
+    # so the inner loop stays data-parallel on the pod (perf iteration 3,
+    # EXPERIMENTS.md §Perf); None = leave placement to GSPMD.
+    batch_constraint: Optional[Any] = None
+
+
+def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
+                      store: FeatureStore, key, ccfg: CycleConfig,
+                      batch: int) -> tuple[EntityState, jnp.ndarray]:
+    """E epochs of minibatch training on the resampled feature dataset."""
+    sb = min(ccfg.server_batch or batch, store.size)
+    plan = resample_plan(key, store.size, ccfg.server_epochs, sb)
+    if ccfg.server_steps is not None:
+        plan = plan[:, : ccfg.server_steps]
+    plan2 = plan.reshape(-1, sb)                     # [E*steps, sb]
+
+    def one_step(entity, idx):
+        f, y = gather_batch(store, idx)
+        if ccfg.batch_constraint is not None:
+            f, y = ccfg.batch_constraint(f, y)
+        loss, grads = jax.value_and_grad(task.server_loss)(entity.params, f, y)
+        return entity_step(entity, grads, opt_s), loss
+
+    server, losses = jax.lax.scan(one_step, server, plan2)
+    return server, jnp.mean(losses)
+
+
+def feature_gradients(task: SplitTask, server_params, feats, ys,
+                      ccfg: CycleConfig):
+    """B_i^g for every cohort member, with θ_S^{t+1} frozen (Eq. 5)."""
+    frozen = jax.lax.stop_gradient(server_params)
+
+    def per_client(f, y):
+        return jax.grad(lambda ff: task.server_loss(frozen, ff, y))(f)
+
+    grads = jax.vmap(per_client)(feats, ys)          # [C, b, ...]
+    if ccfg.avg_client_grads:
+        grads = jnp.broadcast_to(jnp.mean(grads, axis=0, keepdims=True),
+                                 grads.shape)
+    return grads
+
+
+def client_updates(task: SplitTask, clients: EntityState, opt_c: Optimizer,
+                   xs, feat_grads) -> tuple[EntityState, jnp.ndarray]:
+    """Pull B_i^g through each client's VJP and take one optimizer step."""
+
+    def per_client(entity: EntityState, x, g):
+        def fwd(p):
+            return task.client_forward(p, x)
+        out, vjp = jax.vjp(fwd, entity.params)
+        (grads,) = vjp(g.astype(out.dtype))
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                             for l in jax.tree.leaves(grads)))
+        return entity_step(entity, grads, opt_c), gnorm
+
+    new_clients, gnorms = jax.vmap(
+        lambda e, x, g: per_client(e, x, g))(clients, xs, feat_grads)
+    return new_clients, gnorms
+
+
+def cyclesl_round(task: SplitTask, server: EntityState,
+                  clients: EntityState, opt_s: Optimizer, opt_c: Optimizer,
+                  xs, ys, key, ccfg: CycleConfig):
+    """One full CycleSL round (Algorithm 1).
+
+    xs, ys: cohort-stacked batches [C, b, ...].
+    clients: cohort-stacked EntityState.
+    Returns (server', clients', metrics).
+    """
+    # 1. parallel client feature extraction (smashed data)
+    feats = jax.vmap(task.client_forward)(clients.params, xs)
+
+    # 2. pool into the server-side global feature dataset (Eq. 3)
+    store = FeatureStore.pool(jax.lax.stop_gradient(feats), ys)
+
+    # 3. standalone server task: E epochs of resampled minibatches
+    batch = jax.tree.leaves(ys)[0].shape[1]
+    server, server_loss = server_inner_loop(
+        task, server, opt_s, store, key, ccfg, batch=batch)
+
+    # 4. frozen updated server -> feature gradients (Eq. 5)
+    fgrads = feature_gradients(task, server.params, feats, ys, ccfg)
+    fg_flat = fgrads.reshape(fgrads.shape[0], -1).astype(jnp.float32)
+    per_sample_norm = jnp.linalg.norm(
+        fg_flat, axis=-1) / jnp.sqrt(fg_flat.shape[-1])
+
+    # 5. client local updates through the VJP
+    clients, client_gnorms = client_updates(task, clients, opt_c, xs, fgrads)
+
+    metrics = {
+        "server_loss": server_loss,
+        "feat_grad_norm_mean": jnp.mean(per_sample_norm),
+        "feat_grad_norm_std": jnp.std(per_sample_norm),
+        "client_grad_norm_mean": jnp.mean(client_gnorms),
+    }
+    return server, clients, metrics

@@ -1,0 +1,30 @@
+"""Client-drift / gradient-stability bookkeeping (paper Table 6).
+
+The paper records the norms of the gradients the server sends back to
+clients, averaged inside mini-batch, with mean and std over SL epochs
+and clients.  Round metrics already carry ``feat_grad_norm_*``; this
+accumulator aggregates them across a whole run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class GradStabilityTracker:
+    means: list[float] = field(default_factory=list)
+    stds: list[float] = field(default_factory=list)
+
+    def update(self, metrics: dict):
+        self.means.append(float(metrics["feat_grad_norm_mean"]))
+        self.stds.append(float(metrics["feat_grad_norm_std"]))
+
+    def summary(self) -> dict:
+        m = np.asarray(self.means)
+        return {
+            "grad_norm_mean": float(m.mean()) if len(m) else float("nan"),
+            "grad_norm_std_over_rounds": float(m.std()) if len(m) else float("nan"),
+            "grad_norm_within_batch_std": float(np.mean(self.stds)) if self.stds else float("nan"),
+        }

@@ -1,0 +1,46 @@
+"""The server-side global feature dataset + resampler (paper Eq. 3).
+
+``D_S^f = ⨄_i B_i^f`` — client feature batches are pooled and the
+server resamples *shuffled* mini-batches that are no longer client-
+bound.  On a pod the pooled array stays sharded over the 'data' axis and
+resampling is a sharded permutation-gather (the `feature_resample`
+Pallas kernel covers the shard-local gather).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FeatureStore(NamedTuple):
+    """Pooled smashed data: features [T, ...], labels pytree of [T, ...]."""
+    features: jax.Array
+    labels: jax.Array
+
+    @classmethod
+    def pool(cls, feature_batches, label_batches) -> "FeatureStore":
+        """[C, b, ...] per-client batches -> pooled [C*b, ...].
+        Labels may be any pytree of [C, b, ...] arrays."""
+        merge = lambda a: a.reshape((-1,) + a.shape[2:])
+        return cls(merge(feature_batches), jax.tree.map(merge, label_batches))
+
+    @property
+    def size(self) -> int:
+        return self.features.shape[0]
+
+
+def resample_plan(key, total: int, epochs: int, batch: int) -> jax.Array:
+    """Index plan [epochs, steps, batch]: a fresh permutation per server
+    epoch (random-reshuffling — the paper's analog of centralized
+    shuffling, §3.1).  Truncates the tail that doesn't fill a batch."""
+    steps = total // batch
+    keys = jax.random.split(key, epochs)
+    perms = jnp.stack([jax.random.permutation(k, total) for k in keys])
+    return perms[:, : steps * batch].reshape(epochs, steps, batch)
+
+
+def gather_batch(store: FeatureStore, idx) -> tuple[jax.Array, jax.Array]:
+    return (jnp.take(store.features, idx, axis=0),
+            jax.tree.map(lambda l: jnp.take(l, idx, axis=0), store.labels))

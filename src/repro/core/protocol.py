@@ -1,0 +1,58 @@
+"""Round/entity state containers shared by every SL algorithm.
+
+Each *entity* (the server, or one client) owns params + its own
+optimizer state + step counter.  CycleSL's "standalone higher-level
+task" framing (paper §3.1) requires the server optimizer to be fully
+independent of the clients' — so the optimizer state lives here, per
+entity, not in a global trainer.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer
+from repro.optim.optimizer import apply_updates
+
+
+class EntityState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray            # int32 scalar
+
+
+def init_entity(params, opt: Optimizer) -> EntityState:
+    return EntityState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+
+def entity_step(entity: EntityState, grads, opt: Optimizer) -> EntityState:
+    updates, new_opt = opt.update(grads, entity.opt_state, entity.params,
+                                  entity.step)
+    return EntityState(apply_updates(entity.params, updates), new_opt,
+                       entity.step + 1)
+
+
+def stack_entities(entities: list[EntityState]) -> EntityState:
+    """Stack per-client EntityStates along a leading cohort dim (vmap-able)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *entities)
+
+
+def entity_mean(stacked: EntityState) -> EntityState:
+    """FedAvg-style aggregation over the leading cohort dim."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), stacked)
+
+
+def broadcast_entity(entity: EntityState, n: int) -> EntityState:
+    """Replicate one entity state n times along a new leading dim."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), entity)
+
+
+def take_entities(stacked: EntityState, idx) -> EntityState:
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), stacked)
+
+
+def put_entities(stacked: EntityState, idx, values: EntityState) -> EntityState:
+    return jax.tree.map(lambda x, v: x.at[idx].set(v), stacked, values)

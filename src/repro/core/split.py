@@ -1,0 +1,161 @@
+"""Split-model abstraction: θ_CS = θ_S ∘ θ_C with an explicit cut.
+
+A :class:`SplitTask` packages the five functions every SL algorithm in
+this repo consumes.  Builders wrap (a) the paper's StageModel zoo
+(CNN/LSTM/MLP) and (b) the big assigned transformer archs cut at
+``cfg.cut_layers`` (+ whisper at the enc/dec boundary).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.cnn import StageModel
+from repro.models.transformer import Transformer, block_kind
+from repro.utils.tree import tree_slice
+
+
+@dataclass(frozen=True)
+class SplitTask:
+    """The split-learning contract (paper Eq. 1)."""
+
+    name: str
+    init_client: Callable[[Any], Any]                 # key -> θ_C
+    init_server: Callable[[Any], Any]                 # key -> θ_S
+    client_forward: Callable[[Any, Any], Any]         # (θ_C, x) -> features
+    server_apply: Callable[[Any, Any], Any]           # (θ_S, f) -> outputs
+    loss: Callable[[Any, Any], jnp.ndarray]           # (outputs, y) -> scalar
+    metrics: Callable[[Any, Any], dict]               # (outputs, y) -> dict
+
+    # -------- derived --------
+    def server_loss(self, sp, features, y):
+        return self.loss(self.server_apply(sp, features), y)
+
+    def e2e_loss(self, cp, sp, x, y):
+        return self.server_loss(sp, self.client_forward(cp, x), y)
+
+    def predict(self, cp, sp, x):
+        return self.server_apply(sp, self.client_forward(cp, x))
+
+
+# --------------------------------------------------------------- losses
+def xent_loss(logits, y):
+    ll = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(ll, y[..., None], axis=-1))
+
+
+def xent_metrics(logits, y):
+    pred = jnp.argmax(logits, axis=-1)
+    return {"accuracy": jnp.mean((pred == y).astype(jnp.float32))}
+
+
+def mse_loss(pred, y):
+    return jnp.mean(jnp.square(pred.astype(jnp.float32) - y))
+
+
+def mse_metrics(pred, y):
+    # angular-distance analog used by the paper's gaze task
+    p = pred / (jnp.linalg.norm(pred, axis=-1, keepdims=True) + 1e-8)
+    t = y / (jnp.linalg.norm(y, axis=-1, keepdims=True) + 1e-8)
+    cos = jnp.clip(jnp.sum(p * t, axis=-1), -1, 1)
+    return {"angular_deg": jnp.mean(jnp.degrees(jnp.arccos(cos)))}
+
+
+# ---------------------------------------------------- StageModel builder
+def make_stage_task(model: StageModel, cut: int, kind: str = "xent",
+                    name: str | None = None) -> SplitTask:
+    """Split a StageModel at stage index ``cut`` (paper's block-wise cut)."""
+    assert 0 < cut < model.n_stages, f"cut {cut} out of range"
+    loss, metrics = ((xent_loss, xent_metrics) if kind == "xent"
+                     else (mse_loss, mse_metrics))
+
+    def init_client(key):
+        full = model.init(key)
+        return full[:cut]
+
+    def init_server(key):
+        full = model.init(key)
+        return full[cut:]
+
+    def client_forward(cp, x):
+        return model.apply_range(cp, x, 0, cut)
+
+    def server_apply(sp, f):
+        x = f
+        for i in range(cut, model.n_stages):
+            x = model.stages[i][1](sp[i - cut], x)
+        return x
+
+    return SplitTask(name or f"{model.name}@cut{cut}",
+                     init_client, init_server, client_forward,
+                     server_apply, loss, metrics)
+
+
+# -------------------------------------------------- Transformer builder
+def make_transformer_task(cfg: ArchConfig) -> SplitTask:
+    """Cut a decoder-only arch after ``cfg.cut_layers`` blocks.
+
+    θ_C = embedding + blocks[:cut] (the smashed data is the block-`cut`
+    activation); θ_S = blocks[cut:] + final norm + head.  Labels are the
+    next-token ids; the server also owns the MoE aux losses.
+    """
+    cut = cfg.cut_layers
+    kind = block_kind(cfg)
+
+    def init_client(key):
+        p = Transformer.init(key, cfg)
+        out = {"embed": p["embed"], "blocks": tree_slice(p["blocks"], 0, cut)}
+        return out
+
+    def init_server(key):
+        p = Transformer.init(key, cfg)
+        out = {"blocks": tree_slice(p["blocks"], cut, None),
+               "final_norm": p["final_norm"]}
+        if not cfg.tie_embeddings:
+            out["lm_head"] = p["lm_head"]
+        else:
+            out["embed"] = p["embed"]    # unembedding copy server-side
+        if kind == "hybrid":
+            out["shared_attn"] = p["shared_attn"]
+        return out
+
+    def client_forward(cp, batch):
+        tokens = batch["tokens"] if isinstance(batch, dict) else batch
+        patch = batch.get("patch_embeds") if isinstance(batch, dict) else None
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = Transformer.embed_inputs(cp, cfg, tokens, patch)
+        x, _ = Transformer.stack_forward(cp, cfg, x, positions,
+                                         first_block=0, n_blocks=cut)
+        return x
+
+    def server_apply(sp, features):
+        """Returns final hidden states + MoE aux; the loss computes the
+        cross-entropy CHUNKED from hidden so [S, vocab] logits are never
+        materialized (perf iteration 4, §Perf)."""
+        B, S = features.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, metrics = Transformer.stack_forward(
+            sp, cfg, features, positions,
+            first_block=cut, n_blocks=cfg.n_layers - cut)
+        return {"hidden": x, "aux": metrics, "params": sp}
+
+    def loss(outputs, labels):
+        nll, _ = Transformer.chunked_lm_loss(
+            outputs["params"], cfg, outputs["hidden"], labels)
+        if cfg.moe is not None:
+            nll = (nll + cfg.moe.aux_weight * outputs["aux"]["aux_loss"]
+                   + cfg.moe.router_z_weight * outputs["aux"]["z_loss"])
+        return nll
+
+    def metrics(outputs, labels):
+        _, acc = Transformer.chunked_lm_loss(
+            outputs["params"], cfg, outputs["hidden"], labels)
+        return {"accuracy": acc}
+
+    return SplitTask(f"{cfg.name}@cut{cut}", init_client, init_server,
+                     client_forward, server_apply, loss, metrics)

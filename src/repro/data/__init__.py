@@ -1,0 +1,4 @@
+from repro.data.partition import dirichlet_partition, power_law_sizes
+from repro.data.synthetic import (SyntheticImageTask, SyntheticCharLMTask,
+                                  SyntheticRegressionTask)
+from repro.data.federated import FederatedDataset, sample_cohort

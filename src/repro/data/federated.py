@@ -1,0 +1,61 @@
+"""Federated dataset container + cohort (partial-attendance) sampling.
+
+Implements the paper's experimental protocol: sample-wise 90/10
+train/test split per client (§4.1) and a 5% attendance rate per round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class ClientData:
+    x_train: np.ndarray
+    y_train: np.ndarray
+    x_test: np.ndarray
+    y_test: np.ndarray
+
+    def sample_batch(self, rng: np.random.Generator, batch: int):
+        idx = rng.choice(len(self.x_train), size=batch,
+                         replace=len(self.x_train) < batch)
+        return self.x_train[idx], self.y_train[idx]
+
+
+@dataclass
+class FederatedDataset:
+    clients: list[ClientData] = field(default_factory=list)
+
+    @classmethod
+    def from_arrays(cls, x, y, client_indices, test_frac: float = 0.1,
+                    min_train: int = 2, seed: int = 0) -> "FederatedDataset":
+        """Sample-wise split per client (paper §4.1).  Clients that cannot
+        fill a batch are kept but may resample with replacement."""
+        rng = np.random.default_rng(seed)
+        clients = []
+        for idx in client_indices:
+            idx = np.asarray(idx)
+            rng.shuffle(idx)
+            n_test = max(1, int(len(idx) * test_frac))
+            if len(idx) - n_test < min_train:
+                n_test = max(0, len(idx) - min_train)
+            te, tr = idx[:n_test], idx[n_test:]
+            clients.append(ClientData(x[tr], y[tr], x[te], y[te]))
+        return cls(clients)
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.clients)
+
+    def test_arrays(self):
+        xs = np.concatenate([c.x_test for c in self.clients if len(c.x_test)])
+        ys = np.concatenate([c.y_test for c in self.clients if len(c.y_test)])
+        return xs, ys
+
+
+def sample_cohort(n_clients: int, attendance: float,
+                  rng: np.random.Generator, min_cohort: int = 1) -> np.ndarray:
+    """Partial participation: sample ceil(attendance * N) distinct clients."""
+    k = max(min_cohort, int(round(attendance * n_clients)))
+    return rng.choice(n_clients, size=min(k, n_clients), replace=False)

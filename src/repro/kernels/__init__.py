@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Layout per the repo convention:
+  <name>.py  — pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py     — jit'd public wrappers (interpret=True on CPU)
+  ref.py     — pure-jnp oracles the tests assert against
+
+Kernels:
+  flash_attention  — blocked online-softmax attention (GQA/causal/window/softcap)
+  ssd_scan         — Mamba-2 SSD chunked scan with cross-chunk carry
+  topk_gating      — MoE router: softmax + iterative top-k + renorm
+  feature_resample — CycleSL resampling gather (scalar-prefetch row gather)
+  fused_adam       — one-pass fused Adam update (memory-bound optimizer step)
+"""

@@ -1,0 +1,46 @@
+"""CycleSL feature-resampling gather — Pallas TPU kernel.
+
+The server's resampled mini-batches (paper Eq. 3) are a permutation
+row-gather over the pooled smashed-data array.  XLA lowers ad-hoc
+gathers with index broadcasting; on TPU the efficient idiom is a
+*scalar-prefetch* grid: the permutation indices sit in SMEM, and the
+source BlockSpec's index_map reads idx[i] to stream exactly one source
+row-block per output row-block from HBM into VMEM — a pure
+memory-bound copy at HBM bandwidth, no index arithmetic on the VPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, src_ref, out_ref):
+    # whole row-block is selected by the index_map; plain copy here.
+    out_ref[...] = src_ref[...]
+
+
+def feature_resample(src, idx, *, rows_per_block: int = 1,
+                     interpret: bool = True):
+    """out[i] = src[idx[i]].  src [T, D], idx [M] int32 -> [M, D].
+
+    rows_per_block=1 keeps the index_map exact (each output row streams
+    its own source row); D is the VMEM tile width.
+    """
+    T, D = src.shape
+    M = idx.shape[0]
+    grid = (M,)
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, D), lambda i, idx_ref: (idx_ref[i], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, D), lambda i, idx_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, D), src.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), src)

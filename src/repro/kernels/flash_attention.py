@@ -1,0 +1,121 @@
+"""Blocked online-softmax (flash) attention — Pallas TPU kernel.
+
+TPU adaptation notes (DESIGN.md §4): tiles are MXU-aligned (q-block ×
+kv-block of 128×128 by default, head_dim padded to a lane multiple);
+the kv loop is the innermost *grid* dimension so the (acc, m, l)
+scratch carries across kv blocks in VMEM — the standard TPU flash
+pattern (no warp-level shuffles; the online-softmax state lives in
+VMEM scratch instead).
+
+Supports GQA (kv-head picked by index_map, no materialized repeat),
+causal masking, sliding windows, and gemma2 logit softcap.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 block_q: int, block_k: int, seq_k: int, causal: bool,
+                 window: Optional[int], softcap: Optional[float],
+                 scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # [Bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)                    # [Bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)                    # [Bk, D]
+    s = q @ k.T                                            # [Bq, Bk]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    valid = kpos < seq_k
+    if causal:
+        valid &= qpos >= kpos
+    if window is not None:
+        valid &= (qpos - kpos) < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                                    # [Bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = corr * acc_ref[...] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q [B,Sq,H,D]; k/v [B,Sk,Hkv,D] -> [B,Sq,H,D].
+
+    GQA: q-head h reads kv-head h // (H//Hkv) via the kv BlockSpec
+    index_map — the kv tensor is never repeated in HBM.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = pl.cdiv(Sq, block_q)
+    nk = pl.cdiv(Sk, block_k)
+
+    # layout: [B, H, S, D] blocks
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, seq_k=Sk,
+        causal=causal, window=window, softcap=softcap,
+        scale=1.0 / (D ** 0.5))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pl_scratch((block_q, D)),
+            pl_scratch((block_q, 1)),
+            pl_scratch((block_q, 1)),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def pl_scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

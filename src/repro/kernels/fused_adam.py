@@ -1,0 +1,86 @@
+"""Fused Adam update — Pallas TPU kernel.
+
+The optimizer update is memory-bound: a naive XLA lowering streams
+param/grad/m/v through HBM several times across unfused elementwise
+ops.  This kernel fuses the whole update (moment updates, bias
+correction, parameter step) into one VMEM pass per tile: each operand
+is read once and written once — the HBM-optimal schedule.
+
+Operates on flat fp32 views; ``ops.fused_adam_update`` applies it
+leaf-wise over a pytree.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adam_kernel(p_ref, g_ref, m_ref, v_ref, t_ref,
+                 p_out, m_out, v_out, *,
+                 lr: float, b1: float, b2: float, eps: float,
+                 weight_decay: float):
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    v = v_ref[...]
+    t = t_ref[0].astype(jnp.float32) + 1.0
+
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mh = m / (1.0 - b1 ** t)
+    vh = v / (1.0 - b2 ** t)
+    upd = -lr * mh / (jnp.sqrt(vh) + eps)
+    if weight_decay:
+        upd = upd - lr * weight_decay * p
+    p_out[...] = (p + upd).astype(p_out.dtype)
+    m_out[...] = m
+    v_out[...] = v
+
+
+def fused_adam(p, g, m, v, step, *, lr: float, b1: float = 0.9,
+               b2: float = 0.999, eps: float = 1e-8,
+               weight_decay: float = 0.0, block: int = 65536,
+               interpret: bool = True):
+    """One Adam step on flat arrays.  p/g any float dtype, m/v fp32,
+    step scalar int32.  Returns (p', m', v')."""
+    n = p.size
+    p1, g1 = p.reshape(-1), g.reshape(-1)
+    m1, v1 = m.reshape(-1), v.reshape(-1)
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        p1 = jnp.pad(p1, (0, pad))
+        g1 = jnp.pad(g1, (0, pad))
+        m1 = jnp.pad(m1, (0, pad))
+        v1 = jnp.pad(v1, (0, pad))
+    grid = (p1.size // block,)
+    t_arr = jnp.full((1,), step, jnp.int32)
+    kernel = functools.partial(_adam_kernel, lr=lr, b1=b1, b2=b2, eps=eps,
+                               weight_decay=weight_decay)
+    p2, m2, v2 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(p1.shape, p.dtype),
+            jax.ShapeDtypeStruct(m1.shape, jnp.float32),
+            jax.ShapeDtypeStruct(v1.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(p1, g1, m1, v1, t_arr)
+    return (p2[:n].reshape(p.shape), m2[:n].reshape(m.shape),
+            v2[:n].reshape(v.shape))

@@ -1,0 +1,60 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels are TPU-targeted and validated against ``ref.py`` in interpret
+mode, per the repo's hardware-adaptation contract).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import feature_resample as _fr
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import topk_gating as _tk
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, block_q=block_q,
+                               block_k=block_k,
+                               interpret=_default_interpret())
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128):
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                         interpret=_default_interpret())
+
+
+@partial(jax.jit, static_argnames=("k", "block_t"))
+def topk_gating(logits, k: int, *, block_t: int = 1024):
+    return _tk.topk_gating(logits, k, block_t=block_t,
+                           interpret=_default_interpret())
+
+
+@jax.jit
+def feature_resample(src, idx):
+    return _fr.feature_resample(src, idx, interpret=_default_interpret())
+
+
+@partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "weight_decay"))
+def fused_adam(p, g, m, v, step, *, lr: float, b1: float = 0.9,
+               b2: float = 0.999, eps: float = 1e-8,
+               weight_decay: float = 0.0):
+    from repro.kernels import fused_adam as _fa2
+    return _fa2.fused_adam(p, g, m, v, step, lr=lr, b1=b1, b2=b2, eps=eps,
+                           weight_decay=weight_decay,
+                           interpret=_default_interpret())

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None):
+    """q [B,Sq,H,D], k/v [B,Sk,Hkv,D] -> [B,Sq,H,D] (fp32 math)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qf = q.astype(jnp.float32) / jnp.sqrt(D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(B, Sq, Hkv, g, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    delta = qpos - kpos
+    valid = jnp.ones_like(delta, bool)
+    if causal:
+        valid &= delta >= 0
+    if window is not None:
+        valid &= delta < window
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, vf)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Sequential (unchunked) SSD reference.
+
+    x [B,L,H,P]; dt [B,L,H]; A [H]; Bm/Cm [B,L,H,N] (already per-head).
+    Returns (y [B,L,H,P], h_final [B,H,N,P])."""
+    Bsz, L, H, Pd = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp       # [B,H,P],[B,H],[B,H,N],[B,H,N]
+        dA = jnp.exp(dtt * A)       # [B,H]
+        h = (dA[..., None, None] * h
+             + jnp.einsum("bh,bhn,bhp->bhnp", dtt, bt, xt))
+        y = jnp.einsum("bhn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def topk_gating_ref(logits, k: int):
+    """softmax -> top-k -> renormalized weights.
+
+    logits [T,E] -> (weights [T,k] fp32, ids [T,k] int32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, ids = jax.lax.top_k(probs, k)
+    w = w / jnp.clip(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, ids.astype(jnp.int32)
+
+
+def feature_resample_ref(src, idx):
+    """Row gather: out[i] = src[idx[i]].  src [T,D], idx [M] -> [M,D]."""
+    return jnp.take(src, idx, axis=0)
+
+
+def fused_adam_ref(p, g, m, v, step, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                   weight_decay=0.0):
+    """Reference Adam step (matches repro.optim.adam semantics)."""
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    gf = g.astype(jnp.float32)
+    m2 = b1 * m + (1 - b1) * gf
+    v2 = b2 * v + (1 - b2) * gf * gf
+    mh = m2 / (1 - b1 ** t)
+    vh = v2 / (1 - b2 ** t)
+    upd = -lr * mh / (jnp.sqrt(vh) + eps)
+    if weight_decay:
+        upd = upd - lr * weight_decay * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) + upd).astype(p.dtype), m2, v2

@@ -1,0 +1,95 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §4): the SSD dual form makes the intra-chunk
+work a pair of MXU matmuls ([Q,N]@[N,Q] and [Q,Q]@[Q,P]), and the
+inter-chunk recurrence is carried in a VMEM scratch state [N,P] across
+the innermost grid dimension (chunks execute in order on TPU) — the
+CUDA-style parallel prefix over SMs is replaced by the sequential-grid
++ resident-scratch idiom, which is the natural systolic mapping.
+
+Layout: per (batch, head): x [L,P], dt [L,1], B/C [L,N] (per-head).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[0, 0]                                        # scalar
+    x = x_ref[0, 0].astype(jnp.float32)                    # [Q,P]
+    dt = dt_ref[0, 0].astype(jnp.float32)                  # [Q,1]
+    bm = b_ref[0, 0].astype(jnp.float32)                   # [Q,N]
+    cm = c_ref[0, 0].astype(jnp.float32)                   # [Q,N]
+
+    dA = dt * A                                            # [Q,1], <= 0
+    cum = jnp.cumsum(dA, axis=0)                           # [Q,1]
+
+    # ---- intra-chunk dual form ----
+    # (double-where as in models/mamba2.py: masked diffs are positive and
+    # would overflow exp / poison gradients)
+    diff = cum - cum.T                                     # [Q,Q] cum_i - cum_j
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
+    w = (cm @ bm.T) * lmat * dt.T                          # [Q,Q]
+    y = w @ x                                              # [Q,P]
+
+    # ---- inter-chunk contribution from the carried state ----
+    y += (cm * jnp.exp(cum)) @ h_ref[...]                  # [Q,N]@[N,P]
+
+    # ---- state update ----
+    last = cum[chunk - 1:chunk]                            # [1,1]
+    seg = jnp.exp(last - cum)                              # decay to chunk end
+    h_ref[...] = (jnp.exp(last) * h_ref[...]
+                  + (bm * (dt * seg)).T @ x)               # [N,Q]@[Q,P]
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = True):
+    """x [B,L,H,P]; dt [B,L,H]; A [H]; Bm/Cm [B,L,H,N] (per-head).
+
+    Returns y [B,L,H,P].  L must be a multiple of ``chunk``.
+    """
+    Bsz, L, H, Pd = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, L)
+    assert L % chunk == 0, f"L={L} % chunk={chunk}"
+    nc = L // chunk
+
+    # [B,H,L,*] layouts
+    xt = jnp.swapaxes(x, 1, 2)
+    dtt = jnp.swapaxes(dt, 1, 2)[..., None]
+    bt = jnp.swapaxes(Bm, 1, 2)
+    ct = jnp.swapaxes(Cm, 1, 2)
+    a2 = jnp.broadcast_to(A[None, :], (Bsz, H)).astype(jnp.float32)
+
+    grid = (Bsz, H, nc)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, c: (b, h)),
+            pl.BlockSpec((1, 1, chunk, Pd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, Pd), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, H, L, Pd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, Pd), jnp.float32)],
+        interpret=interpret,
+    )(a2, xt, dtt, bt, ct)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,58 @@
+"""MoE router top-k gating — Pallas TPU kernel.
+
+Fuses softmax + iterative top-k (k rounds of argmax-and-mask, no sort)
++ renormalization over a token block held in VMEM.  The iterative
+top-k is the TPU-idiomatic replacement for CUDA warp-shuffle tournament
+reductions: E (the expert dim) lives in lanes, so the per-round max is
+one lane reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+
+
+def _gating_kernel(logits_ref, w_ref, id_ref, *, k: int, n_experts: int):
+    logits = logits_ref[...].astype(jnp.float32)           # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    masked = probs
+    ws, ids = [], []
+    for _ in range(k):
+        top = jnp.max(masked, axis=-1, keepdims=True)       # [T,1]
+        eidx = jnp.argmax(masked, axis=-1)                  # [T]
+        ws.append(top[:, 0])
+        ids.append(eidx)
+        onehot = jax.nn.one_hot(eidx, n_experts, dtype=jnp.float32)
+        masked = jnp.where(onehot > 0, NEG_INF, masked)
+    w = jnp.stack(ws, axis=-1)                              # [T,k]
+    w = w / jnp.clip(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    w_ref[...] = w
+    id_ref[...] = jnp.stack(ids, axis=-1).astype(jnp.int32)
+
+
+def topk_gating(logits, k: int, *, block_t: int = 1024, interpret: bool = True):
+    """logits [T,E] -> (weights [T,k] fp32 renormalized, ids [T,k] int32)."""
+    T, E = logits.shape
+    block_t = min(block_t, T)
+    assert T % block_t == 0, f"T={T} % block_t={block_t}"
+    grid = (T // block_t,)
+    w, ids = pl.pallas_call(
+        functools.partial(_gating_kernel, k=k, n_experts=E),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_t, E), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, k), jnp.float32),
+            jax.ShapeDtypeStruct((T, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits)
+    return w, ids

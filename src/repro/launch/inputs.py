@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run inputs).
+
+Nothing here allocates device memory: ``input_specs`` returns abstract
+values that ``jax.jit(...).lower()`` consumes directly.
+
+Modality stubs (assignment carve-out):
+  * vlm   — ``patch_embeds`` [B, n_patch_tokens, d] precomputed patch
+            embeddings (vision encoder + projector stubbed).
+  * audio — ``frames`` [B, 1500, d] precomputed conv/mel frame
+            embeddings (whisper frontend stubbed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+
+WHISPER_FRAMES = 1500
+WHISPER_TEXT_CAP = 448      # whisper decoder positional horizon
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape, cohort: int):
+    """(xs, ys) cohort-stacked batch specs [C, b, ...] for the CycleSL
+    train step."""
+    assert shape.global_batch % cohort == 0, (shape.global_batch, cohort)
+    b = shape.global_batch // cohort
+    if cfg.family == "audio":
+        s = min(shape.seq_len, WHISPER_TEXT_CAP)
+        xs = {"frames": sds((cohort, b, WHISPER_FRAMES, cfg.enc_d_model),
+                            cfg.jnp_dtype)}
+        ys = {"tokens": sds((cohort, b, s), jnp.int32),
+              "labels": sds((cohort, b, s), jnp.int32)}
+        return xs, ys
+    xs = {"tokens": sds((cohort, b, shape.seq_len), jnp.int32)}
+    if cfg.family == "vlm":
+        xs["patch_embeds"] = sds(
+            (cohort, b, cfg.n_patch_tokens, cfg.d_model), cfg.jnp_dtype)
+    ys = sds((cohort, b, shape.seq_len), jnp.int32)
+    return xs, ys
+
+
+def prefill_specs(cfg: ArchConfig, shape: InputShape):
+    B = shape.global_batch
+    if cfg.family == "audio":
+        s = min(shape.seq_len, WHISPER_TEXT_CAP)
+        return {"frames": sds((B, WHISPER_FRAMES, cfg.enc_d_model), cfg.jnp_dtype),
+                "tokens": sds((B, s), jnp.int32)}
+    out = {"tokens": sds((B, shape.seq_len), jnp.int32)}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = sds((B, cfg.n_patch_tokens, cfg.d_model),
+                                  cfg.jnp_dtype)
+    return out
+
+
+def decode_token_spec(cfg: ArchConfig, shape: InputShape):
+    return sds((shape.global_batch, 1), jnp.int32)

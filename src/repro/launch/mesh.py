@@ -1,0 +1,42 @@
+"""Production mesh builders (TPU v5e target).
+
+Single pod : (data=16, model=16)            = 256 chips
+Multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+Functions, not module constants, so importing this module never touches
+jax device state (the dry-run forces 512 host devices *before* any jax
+initialization — see dryrun.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — run via "
+            "launch/dryrun.py which forces XLA_FLAGS host device count")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_local_mesh():
+    """Degenerate 1x1 mesh for CPU tests/benchmarks."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def cohort_size(mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,299 @@
+"""Step-function builders for the dry-run / launcher.
+
+For every (arch × input shape) we lower one of:
+
+  train  — one full CycleSL round (paper Algorithm 1) over a cohort of
+           ``data``(×``pod``)-resident clients: the paper's technique IS
+           the train step, not an afterthought.
+  prefill— composed-model forward, next-token logits.
+  decode — one-token serve step against a KV/SSM cache of seq_len.
+
+Each builder returns a :class:`StepBundle` with abstract inputs and
+matching NamedShardings, ready for ``jit(...).lower(...)``.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core.cyclesl import CycleConfig, cyclesl_round
+from repro.core.protocol import EntityState, init_entity
+from repro.core.split import SplitTask, make_transformer_task, xent_loss, xent_metrics
+from repro.launch import inputs as inputs_lib
+from repro.launch.mesh import batch_axes, cohort_size
+from repro.models.encdec import EncDec
+from repro.models.transformer import Transformer
+from repro.optim import adam
+from repro.sharding.specs import (param_specs, set_activation_mesh,
+                                  shard_if_divisible)
+from repro.utils.tree import map_with_path
+
+
+@dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    abstract_args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    # arg indices donated to XLA (in-place state/cache updates; without
+    # this the decode KV cache exists 2-3x per step — §Perf iteration)
+    donate: tuple = ()
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _batch_leading_spec(mesh, leaf_shape, extra: int):
+    axes = batch_axes(mesh)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    if not axes or leaf_shape[0] % size != 0:
+        lead = None
+    return P(lead, *([None] * extra))
+
+
+# ------------------------------------------------------------ whisper task
+def make_whisper_task(cfg: ArchConfig) -> SplitTask:
+    """Whisper SplitTask: encoder = client, decoder = server."""
+
+    def init_client(key):
+        return EncDec.init(key, cfg)["encoder"]
+
+    def init_server(key):
+        return EncDec.init(key, cfg)["decoder"]
+
+    def client_forward(cp, batch):
+        return EncDec.encode(cp, cfg, batch["frames"])
+
+    def server_apply(sp, feats_and_tokens):
+        # server consumes (enc_out, tokens); tokens ride in the label tree
+        raise NotImplementedError  # replaced below by closure trick
+
+    def server_loss(sp, features, y):
+        logits = EncDec.decode_train(sp, cfg, y["tokens"], features)
+        return xent_loss(logits, y["labels"])
+
+    task = SplitTask(f"{cfg.name}@encdec", init_client, init_server,
+                     client_forward, server_apply,
+                     lambda out, y: out, lambda out, y: {})
+    # server_loss is the only server entry point the algorithms use for
+    # whisper; patch it in (SplitTask is frozen -> build a subclass-free
+    # copy via object.__setattr__)
+    object.__setattr__(task, "server_loss", server_loss)
+    return task
+
+
+# ------------------------------------------------------------- train step
+def _server_batch_constraint(cfg: ArchConfig, mesh, server_batch: int):
+    """with_sharding_constraint hook for the resampled server batches:
+    keeps the inner loop data-parallel instead of data-replicated
+    (perf iteration 3).  Prefers batch sharding; falls back to sequence
+    sharding when the server batch doesn't divide the data axis."""
+    from jax.lax import with_sharding_constraint as wsc
+    d_ax = shard_if_divisible(server_batch, "data", mesh)
+    m_ax = "model" if "model" in mesh.shape else None
+
+    def constrain(f, y):
+        if f.ndim >= 3:     # [sb, S, d] transformer features
+            seq_ax = None if d_ax else shard_if_divisible(
+                f.shape[1], "data", mesh)
+            dm_ax = shard_if_divisible(f.shape[-1], m_ax, mesh) if m_ax else None
+            spec = P(d_ax, seq_ax, *([None] * (f.ndim - 3)), dm_ax)
+            f = wsc(f, NamedSharding(mesh, spec))
+        elif f.ndim == 2:
+            f = wsc(f, NamedSharding(mesh, P(d_ax, None)))
+        y = jax.tree.map(
+            lambda l: wsc(l, NamedSharding(
+                mesh, P(d_ax, *([None] * (l.ndim - 1))))), y)
+        return f, y
+
+    return constrain
+
+
+def build_train_step(cfg: ArchConfig, mesh, shape: InputShape,
+                     cycle: CycleConfig = CycleConfig()) -> StepBundle:
+    cohort = cohort_size(mesh)
+    task = (make_whisper_task(cfg) if cfg.family == "audio"
+            else make_transformer_task(cfg))
+    opt_s = adam(3e-4)
+    opt_c = adam(3e-4)
+    if cycle.batch_constraint is None:
+        import dataclasses as _dc
+        sb = cycle.server_batch or (shape.global_batch // cohort)
+        cycle = _dc.replace(cycle, batch_constraint=_server_batch_constraint(
+            cfg, mesh, sb))
+
+    def train_step(server, clients, xs, ys, key):
+        return cyclesl_round(task, server, clients, opt_s, opt_c,
+                             xs, ys, key, cycle)
+
+    # ---- abstract state ----
+    a_server = jax.eval_shape(
+        lambda: init_entity(task.init_server(jax.random.PRNGKey(0)), opt_s))
+    a_client1 = jax.eval_shape(
+        lambda: init_entity(task.init_client(jax.random.PRNGKey(0)), opt_c))
+    a_clients = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((cohort,) + l.shape, l.dtype), a_client1)
+    xs, ys = inputs_lib.train_batch_specs(cfg, shape, cohort)
+    a_key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+
+    # ---- shardings ----
+    moe_mode = cfg.moe.shard_mode if cfg.moe else "expert"
+    s_server = _ns(mesh, param_specs(a_server, mesh, "server", moe_mode))
+    s_clients = _ns(mesh, param_specs(a_clients, mesh, "client", moe_mode))
+    s_xs = jax.tree.map(
+        lambda l: NamedSharding(mesh, _batch_leading_spec(mesh, l.shape,
+                                                          len(l.shape) - 1)), xs)
+    s_ys = jax.tree.map(
+        lambda l: NamedSharding(mesh, _batch_leading_spec(mesh, l.shape,
+                                                          len(l.shape) - 1)), ys)
+    s_key = NamedSharding(mesh, P())
+
+    a_metrics = jax.eval_shape(train_step, a_server, a_clients, xs, ys, a_key)[2]
+    out_shardings = (s_server, s_clients, _replicated(mesh, a_metrics))
+    return StepBundle(
+        "train", train_step,
+        (a_server, a_clients, xs, ys, a_key),
+        (s_server, s_clients, s_xs, s_ys, s_key),
+        out_shardings, donate=(0, 1))
+
+
+# ----------------------------------------------------------- prefill step
+def build_prefill_step(cfg: ArchConfig, mesh, shape: InputShape,
+                       long_context: bool = False) -> StepBundle:
+    if cfg.family == "audio":
+        def prefill(params, batch):
+            logits = EncDec.forward(params, cfg, batch["frames"], batch["tokens"])
+            return logits[:, -1].astype(jnp.bfloat16)
+        a_params = jax.eval_shape(lambda: EncDec.init(jax.random.PRNGKey(0), cfg))
+    else:
+        def prefill(params, batch):
+            logits, _ = Transformer.forward(
+                params, cfg, batch["tokens"], batch.get("patch_embeds"),
+                long_context=long_context)
+            return logits[:, -1].astype(jnp.bfloat16)
+        a_params = jax.eval_shape(
+            lambda: Transformer.init(jax.random.PRNGKey(0), cfg))
+
+    batch = inputs_lib.prefill_specs(cfg, shape)
+    moe_mode = cfg.moe.shard_mode if cfg.moe else "expert"
+    s_params = _ns(mesh, param_specs(a_params, mesh, "full", moe_mode))
+    s_batch = jax.tree.map(
+        lambda l: NamedSharding(mesh, _batch_leading_spec(mesh, l.shape,
+                                                          len(l.shape) - 1)),
+        batch)
+    out_sh = NamedSharding(mesh, _batch_leading_spec(
+        mesh, (shape.global_batch,), 1))
+    return StepBundle("prefill", prefill, (a_params, batch),
+                      (s_params, s_batch), out_sh)
+
+
+# ------------------------------------------------------------ decode step
+_DECODE_RULES = [
+    # suffix regex, callable(shape, mesh) -> PartitionSpec
+    (r"kv/k$|kv/v$", "kvcache"),     # [L,B,C,Hkv,Dh]
+    (r"mamba/h$", "mamba_h"),        # [L,B,H,N,P]
+    (r"mamba/conv$", "mamba_conv"),  # [L,B,K-1,ch]
+    (r"enc_out$", "enc_out"),        # [B,T,d]
+]
+
+
+def _decode_state_spec(path: str, leaf, mesh) -> P:
+    shape = leaf.shape
+    bspec = _batch_leading_spec(mesh, shape[1:2] if len(shape) > 1 else (1,), 0)
+    batch_axis = bspec[0] if len(bspec) else None
+    for pat, kind in _DECODE_RULES:
+        if not re.search(pat, path):
+            continue
+        if kind == "kvcache":
+            L, B, C, Hkv, Dh = shape
+            h_ax = shard_if_divisible(Hkv, "model", mesh)
+            c_ax = None if h_ax else shard_if_divisible(C, "model", mesh)
+            b_ax = batch_axis if B > 1 else None
+            if b_ax is None and batch_axis is None:
+                # batch=1 long-context: shard cache length over 'data'
+                c_data = shard_if_divisible(C, "data", mesh)
+                return P(None, None, c_data, h_ax, None)
+            return P(None, b_ax, c_ax, h_ax, None)
+        if kind == "mamba_h":
+            L, B, H, N, Pd = shape
+            h_ax = shard_if_divisible(H, "model", mesh)
+            return P(None, batch_axis if B > 1 else None, h_ax, None, None)
+        if kind == "mamba_conv":
+            L, B, K, ch = shape
+            c_ax = shard_if_divisible(ch, "model", mesh)
+            return P(None, batch_axis if B > 1 else None, None, c_ax)
+        if kind == "enc_out":
+            B, T, d = shape
+            d_ax = shard_if_divisible(d, "model", mesh)
+            return P(batch_axis if B > 1 else None, None, d_ax)
+    return P()
+
+
+def build_decode_step(cfg: ArchConfig, mesh, shape: InputShape,
+                      long_context: bool = False) -> StepBundle:
+    B = shape.global_batch
+    if cfg.family == "audio":
+        a_params = jax.eval_shape(lambda: EncDec.init(jax.random.PRNGKey(0), cfg))
+
+        def decode(params, token, state):
+            return EncDec.decode_step(params, cfg, token, state,
+                                      long_context=long_context)
+
+        frames = inputs_lib.sds((B, inputs_lib.WHISPER_FRAMES, cfg.enc_d_model),
+                                cfg.jnp_dtype)
+        a_state = jax.eval_shape(
+            lambda p, f: EncDec.init_decode_state(p, cfg, f, shape.seq_len,
+                                                  long_context),
+            a_params, frames)
+    else:
+        a_params = jax.eval_shape(
+            lambda: Transformer.init(jax.random.PRNGKey(0), cfg))
+
+        def decode(params, token, state):
+            return Transformer.decode_step(params, cfg, token, state,
+                                           long_context=long_context)
+
+        a_state = jax.eval_shape(
+            lambda: Transformer.init_decode_state(cfg, B, shape.seq_len,
+                                                  long_context))
+
+    token = inputs_lib.decode_token_spec(cfg, shape)
+    moe_mode = cfg.moe.shard_mode if cfg.moe else "expert"
+    s_params = _ns(mesh, param_specs(a_params, mesh, "full", moe_mode))
+    s_state = _ns(mesh, map_with_path(
+        lambda path, leaf: _decode_state_spec(path, leaf, mesh), a_state))
+    s_token = NamedSharding(mesh, _batch_leading_spec(mesh, token.shape, 1))
+    a_out = jax.eval_shape(decode, a_params, token, a_state)
+    out_sh = (NamedSharding(mesh, _batch_leading_spec(mesh, token.shape, 2)),
+              s_state)
+    del a_out
+    return StepBundle("decode", decode, (a_params, token, a_state),
+                      (s_params, s_token, s_state), out_sh, donate=(2,))
+
+
+def build_step(cfg: ArchConfig, mesh, shape: InputShape,
+               long_context: Optional[bool] = None,
+               cycle: CycleConfig = CycleConfig()) -> StepBundle:
+    set_activation_mesh(mesh)   # activation-batch constraints (§Perf it.5)
+    lc = shape.name == "long_500k" if long_context is None else long_context
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, cycle)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, long_context=lc)
+    return build_decode_step(cfg, mesh, shape, long_context=lc)

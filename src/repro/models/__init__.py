@@ -1,0 +1,11 @@
+"""Pure-JAX model substrate.
+
+Every model in this package follows the same functional contract:
+
+  params = <model>.init(key, cfg)          # pytree of jnp arrays
+  out    = <model>.apply(params, cfg, *x)  # pure function
+
+Layer stacks are *stacked* along a leading ``layers`` dim and executed
+with ``jax.lax.scan`` so HLO size (and compile time) is O(1) in depth —
+a hard requirement for the 512-virtual-device multi-pod dry-run.
+"""

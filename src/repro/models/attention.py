@@ -1,0 +1,205 @@
+"""Grouped-query attention with RoPE, logit softcap, sliding windows, and a
+ring-buffer KV cache for decode.
+
+All shapes are batch-first: x [B, S, D].  Heads layout [B, S, H, Dh].
+The XLA einsum path here is also the correctness oracle for the Pallas
+flash-attention kernel in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, AttnConfig
+from repro.models import module
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_init, softcap
+
+NEG_INF = -2.0e38
+
+
+def attn_init(key, cfg: ArchConfig, dtype):
+    """QKV + output projections (no biases, per the assigned archs)."""
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": module.dense_init(kq, d, cfg.n_heads * hd, dtype),
+        "wk": module.dense_init(kk, d, cfg.n_kv_heads * hd, dtype),
+        "wv": module.dense_init(kv, d, cfg.n_kv_heads * hd, dtype),
+        "wo": module.dense_init(ko, cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.attn.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _merge_heads(x):
+    return x.reshape(x.shape[:-2] + (-1,))
+
+
+def _mask_bias(q_pos, k_pos, window: Optional[int], causal: bool = True):
+    """Additive mask bias [..., Sq, Sk] built from absolute positions."""
+    delta = q_pos[..., :, None] - k_pos[..., None, :]
+    valid = jnp.ones(delta.shape, bool)
+    if causal:
+        valid &= delta >= 0
+    if window is not None:
+        valid &= delta < window
+    return jnp.where(valid, 0.0, NEG_INF)
+
+
+def sdpa(q, k, v, bias, cap: Optional[float] = None):
+    """q [B,Sq,H,Dh], k/v [B,Sk,Hkv,Dh] (GQA broadcast), bias [B?,Sq,Sk]."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qf = q.astype(jnp.float32) / jnp.sqrt(Dh).astype(jnp.float32)
+    qf = qf.reshape(B, Sq, Hkv, g, Dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    logits = softcap(logits, cap)
+    logits = logits + bias[:, None, None] if bias.ndim == 3 else logits + bias
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+# Above this many query positions, attention runs q-chunked (blockwise)
+# so the S x S score tensor is never materialized — perf iteration 1,
+# see EXPERIMENTS.md §Perf.  Chunks are checkpointed: backward
+# recomputes per-chunk scores (flash-style memory at XLA level).
+QCHUNK_THRESHOLD = 2048
+QCHUNK = 1024
+
+
+def sdpa_qchunked(q, k, v, q_pos, k_pos, window, cap,
+                  causal: bool = True, chunk: int = QCHUNK):
+    """Blockwise attention over query chunks.  q [B,S,H,D] -> [B,S,H,D].
+    Peak temp is O(chunk * Sk) instead of O(Sq * Sk)."""
+    B, S, H, Dh = q.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        pad = chunk - S % chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+        S_p = S + pad
+    else:
+        S_p = S
+    nc = S_p // chunk
+    qc = jnp.moveaxis(q.reshape(B, nc, chunk, H, Dh), 1, 0)
+    pc = jnp.moveaxis(q_pos.reshape(B, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def one(args):
+        qi, pi = args                                     # [B,chunk,H,D],[B,chunk]
+        bias = _mask_bias(pi, k_pos, window, causal)      # [B,chunk,Sk]
+        return sdpa(qi, k, v, bias, cap)
+
+    out = jax.lax.map(one, (qc, pc))                      # [nc,B,chunk,H,D]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S_p, H, Dh)
+    return out[:, :S]
+
+
+def attend_full(params, cfg: ArchConfig, x, positions, window: Optional[int]):
+    """Full-sequence (train / prefill) attention.  Returns (out, (k, v))."""
+    a: AttnConfig = cfg.attn
+    hd = cfg.hd
+    q = _split_heads(x @ params["wq"], cfg.n_heads, hd)
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if a.rope:
+        q = apply_rope(q, positions, a.rope_theta)
+        k = apply_rope(k, positions, a.rope_theta)
+    S = q.shape[1]
+    if S > QCHUNK_THRESHOLD:
+        out = sdpa_qchunked(q, k, v, positions, positions, window,
+                            a.logit_softcap)
+    else:
+        bias = _mask_bias(positions, positions, window)   # [B,S,S] or [S,S]
+        if bias.ndim == 2:
+            bias = bias[None]
+        out = sdpa(q, k, v, bias, a.logit_softcap)
+    return _merge_heads(out) @ params["wo"], (k, v)
+
+
+class KVCache(NamedTuple):
+    """Fixed-capacity ring buffer per layer stack.
+
+    k, v: [L, B, C, Hkv, Dh] where C = capacity (window or full seq).
+    idx:  scalar int32 — number of tokens written so far (global position).
+    """
+    k: jax.Array
+    v: jax.Array
+    idx: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[2]
+
+
+def kv_cache_init(cfg: ArchConfig, n_layers: int, batch: int, capacity: int, dtype):
+    shape = (n_layers, batch, capacity, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def attend_decode(params, cfg: ArchConfig, x, layer_k, layer_v, pos,
+                  window: Optional[int]):
+    """One-token decode against a ring-buffer cache slice.
+
+    x: [B, 1, D]; layer_k/v: [B, C, Hkv, Dh]; pos: scalar int32 (global
+    position of the new token).  Returns (out [B,1,D], new_k, new_v).
+    """
+    a: AttnConfig = cfg.attn
+    hd = cfg.hd
+    C = layer_k.shape[1]
+    q = _split_heads(x @ params["wq"], cfg.n_heads, hd)
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if a.rope:
+        posb = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        q = apply_rope(q, posb, a.rope_theta)
+        k = apply_rope(k, posb, a.rope_theta)
+    slot = pos % C
+    layer_k = layer_k.at[:, slot].set(k[:, 0])
+    layer_v = layer_v.at[:, slot].set(v[:, 0])
+    # absolute position of every cache slot (ring semantics)
+    slots = jnp.arange(C, dtype=jnp.int32)
+    # slot s holds global position: largest p <= pos with p % C == s
+    k_pos = pos - ((pos - slots) % C)
+    valid = k_pos >= 0
+    if window is not None:
+        valid &= (pos - k_pos) < window
+    bias = jnp.where(valid, 0.0, NEG_INF)[None, None, :]     # [1,1,C]
+    out = sdpa(q, layer_k, layer_v, bias, a.logit_softcap)
+    return _merge_heads(out) @ params["wo"], layer_k, layer_v
+
+
+def layer_window(cfg: ArchConfig, layer_idx_is_local: bool,
+                 long_context: bool) -> Optional[int]:
+    """Resolve the effective sliding window for a layer.
+
+    - pattern 'global': no window, unless long_context forces the
+      carve-out window (sub-quadratic serving variant, see DESIGN.md).
+    - pattern 'local_global': even layers local (cfg.attn.window), odd
+      global (windowed only in long_context mode).
+    """
+    a = cfg.attn
+    if a.pattern == "local_global" and layer_idx_is_local:
+        return a.window
+    if long_context:
+        return cfg.long_context_window
+    if a.pattern == "local":
+        return a.window
+    return None

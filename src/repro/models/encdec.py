@@ -1,0 +1,193 @@
+"""Encoder-decoder transformer (whisper-base backbone).
+
+The mel-spectrogram + conv feature extractor is a STUB per the
+assignment: ``input_specs`` supplies precomputed frame embeddings
+[B, T_frames, d].  This module implements the transformer backbone:
+bidirectional encoder + causal decoder with cross-attention.
+
+Split-learning mapping (DESIGN.md §5): the encoder is the natural client
+part, the decoder the server part — the enc/dec boundary is the cut.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import ffn as ffn_lib
+from repro.models import module
+from repro.models.attention import KVCache, kv_cache_init, sdpa
+from repro.models.layers import (embedding, embedding_init, layernorm,
+                                 layernorm_init)
+from repro.models.module import stacked_init
+
+N_AUDIO_FRAMES = 1500  # whisper: 30s @ 50 fps after conv stub
+
+
+def _enc_block_init(key, cfg: ArchConfig, dtype):
+    ka, kf = jax.random.split(key)
+    return {
+        "attn": attn_lib.attn_init(ka, cfg, dtype),
+        "ffn": ffn_lib.gelu_mlp_init(kf, cfg.d_model, cfg.d_ff, dtype),
+        "norm_attn": layernorm_init(cfg.d_model, dtype),
+        "norm_ffn": layernorm_init(cfg.d_model, dtype),
+    }
+
+
+def _dec_block_init(key, cfg: ArchConfig, dtype):
+    ka, kx, kf = jax.random.split(key, 3)
+    return {
+        "self_attn": attn_lib.attn_init(ka, cfg, dtype),
+        "cross_attn": attn_lib.attn_init(kx, cfg, dtype),
+        "ffn": ffn_lib.gelu_mlp_init(kf, cfg.d_model, cfg.d_ff, dtype),
+        "norm_self": layernorm_init(cfg.d_model, dtype),
+        "norm_cross": layernorm_init(cfg.d_model, dtype),
+        "norm_ffn": layernorm_init(cfg.d_model, dtype),
+    }
+
+
+class EncDec:
+    @staticmethod
+    def init(key, cfg: ArchConfig):
+        dtype = cfg.jnp_dtype
+        ke, kp, kq, kb, kd = jax.random.split(key, 5)
+        return {
+            "encoder": {
+                "pos": (jax.random.normal(kp, (N_AUDIO_FRAMES, cfg.d_model),
+                                          jnp.float32) * 0.01).astype(dtype),
+                "blocks": stacked_init(lambda k: _enc_block_init(k, cfg, dtype),
+                                       kb, cfg.enc_layers),
+                "final_norm": layernorm_init(cfg.d_model, dtype),
+            },
+            "decoder": {
+                "embed": embedding_init(ke, cfg.vocab_padded, cfg.d_model, dtype),
+                "pos": (jax.random.normal(kq, (448, cfg.d_model),
+                                          jnp.float32) * 0.01).astype(dtype),
+                "blocks": stacked_init(lambda k: _dec_block_init(k, cfg, dtype),
+                                       kd, cfg.n_layers),
+                "final_norm": layernorm_init(cfg.d_model, dtype),
+            },
+        }
+
+    # ---------------- encoder (client part) ----------------
+    @staticmethod
+    def encode(enc_params, cfg: ArchConfig, frames):
+        """frames [B, T, d] (stub conv output) -> encoder states."""
+        B, T, _ = frames.shape
+        x = frames + enc_params["pos"][:T][None]
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+        def body(xs, bp):
+            h = layernorm(bp["norm_attn"], xs, cfg.norm_eps)
+            # bidirectional: no causal mask; q-chunked above the threshold
+            # (perf iteration: encoder frames are 1500 long)
+            hd = cfg.hd
+            q = (h @ bp["attn"]["wq"]).reshape(B, T, cfg.n_heads, hd)
+            k = (h @ bp["attn"]["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+            v = (h @ bp["attn"]["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+            if T > 512:
+                a = attn_lib.sdpa_qchunked(
+                    q, k, v, positions, positions, None, None,
+                    causal=False, chunk=512)
+            else:
+                a = sdpa(q, k, v, jnp.zeros((1, T, T), jnp.float32))
+            xs = xs + a.reshape(B, T, -1) @ bp["attn"]["wo"]
+            h = layernorm(bp["norm_ffn"], xs, cfg.norm_eps)
+            return xs + ffn_lib.gelu_mlp(bp["ffn"], h), None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, enc_params["blocks"])
+        return layernorm(enc_params["final_norm"], x, cfg.norm_eps)
+
+    # ---------------- decoder (server part) ----------------
+    @staticmethod
+    def _cross_attend(bp, cfg: ArchConfig, h, enc_out):
+        B, S, _ = h.shape
+        T = enc_out.shape[1]
+        hd = cfg.hd
+        q = (h @ bp["wq"]).reshape(B, S, cfg.n_heads, hd)
+        k = (enc_out @ bp["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+        v = (enc_out @ bp["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+        bias = jnp.zeros((1, S, T), jnp.float32)
+        return sdpa(q, k, v, bias).reshape(B, S, -1) @ bp["wo"]
+
+    @staticmethod
+    def decode_train(dec_params, cfg: ArchConfig, tokens, enc_out):
+        """Teacher-forced decoder forward.  tokens [B,S] -> logits."""
+        B, S = tokens.shape
+        x = embedding(dec_params["embed"], tokens)
+        x = x + dec_params["pos"][:S][None]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(xs, bp):
+            h = layernorm(bp["norm_self"], xs, cfg.norm_eps)
+            a, _ = attn_lib.attend_full(bp["self_attn"], cfg, h, positions, None)
+            xs = xs + a
+            h = layernorm(bp["norm_cross"], xs, cfg.norm_eps)
+            xs = xs + EncDec._cross_attend(bp["cross_attn"], cfg, h, enc_out)
+            h = layernorm(bp["norm_ffn"], xs, cfg.norm_eps)
+            return xs + ffn_lib.gelu_mlp(bp["ffn"], h), None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, dec_params["blocks"])
+        x = layernorm(dec_params["final_norm"], x, cfg.norm_eps)
+        return EncDec._logits(dec_params, cfg, x)
+
+    @staticmethod
+    def _logits(dec_params, cfg: ArchConfig, x):
+        """Unembed against the PADDED table (vocab shards on the model
+        axis); padded columns masked, then sliced off."""
+        logits = (x @ dec_params["embed"]["table"].T).astype(jnp.float32)
+        return logits[..., :cfg.vocab]
+
+    @staticmethod
+    def forward(params, cfg: ArchConfig, frames, tokens):
+        enc_out = EncDec.encode(params["encoder"], cfg, frames)
+        return EncDec.decode_train(params["decoder"], cfg, tokens, enc_out)
+
+    @staticmethod
+    def loss_fn(params, cfg: ArchConfig, frames, tokens, labels):
+        logits = EncDec.forward(params, cfg, frames, tokens)
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll), {}
+
+    # ---------------- serving ----------------
+    @staticmethod
+    def init_decode_state(params, cfg: ArchConfig, frames, seq_len: int,
+                          long_context: bool = False):
+        """Encode once; allocate self-attn cache (optionally windowed)."""
+        enc_out = EncDec.encode(params["encoder"], cfg, frames)
+        cap = seq_len if not long_context else min(seq_len, cfg.long_context_window)
+        B = frames.shape[0]
+        kv = kv_cache_init(cfg, cfg.n_layers, B, cap, cfg.jnp_dtype)
+        return {"enc_out": enc_out, "kv": kv, "pos": jnp.zeros((), jnp.int32)}
+
+    @staticmethod
+    def decode_step(params, cfg: ArchConfig, token, state,
+                    long_context: bool = False):
+        dec = params["decoder"]
+        pos = state["pos"]
+        kv: KVCache = state["kv"]
+        enc_out = state["enc_out"]
+        x = embedding(dec["embed"], token)
+        x = x + jax.lax.dynamic_index_in_dim(
+            dec["pos"], jnp.minimum(pos, dec["pos"].shape[0] - 1),
+            keepdims=True)[None]
+        window = cfg.long_context_window if long_context else None
+
+        def body(xs, inp):
+            bp, lk, lv = inp
+            h = layernorm(bp["norm_self"], xs, cfg.norm_eps)
+            a, nk, nv = attn_lib.attend_decode(bp["self_attn"], cfg, h,
+                                               lk, lv, pos, window)
+            xs = xs + a
+            h = layernorm(bp["norm_cross"], xs, cfg.norm_eps)
+            xs = xs + EncDec._cross_attend(bp["cross_attn"], cfg, h, enc_out)
+            h = layernorm(bp["norm_ffn"], xs, cfg.norm_eps)
+            return xs + ffn_lib.gelu_mlp(bp["ffn"], h), (nk, nv)
+
+        xs, (nk, nv) = jax.lax.scan(body, x, (dec["blocks"], kv.k, kv.v))
+        x = layernorm(dec["final_norm"], xs, cfg.norm_eps)
+        logits = EncDec._logits(dec, cfg, x)
+        state = dict(state, kv=KVCache(nk, nv, kv.idx + 1), pos=pos + 1)
+        return logits, state

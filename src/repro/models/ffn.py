@@ -1,0 +1,36 @@
+"""Dense feed-forward blocks: SwiGLU (default) and GeLU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module
+
+
+def swiglu_init(key, d: int, f: int, dtype):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": module.dense_init(kg, d, f, dtype),
+        "w_up": module.dense_init(ku, d, f, dtype),
+        "w_down": module.dense_init(kd, f, d, dtype),
+    }
+
+
+def swiglu(params, x):
+    g = jax.nn.silu(x @ params["w_gate"])
+    return (g * (x @ params["w_up"])) @ params["w_down"]
+
+
+def gelu_mlp_init(key, d: int, f: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": module.dense_init(k1, d, f, dtype),
+        "b_in": jnp.zeros((f,), dtype),
+        "w_out": module.dense_init(k2, f, d, dtype),
+        "b_out": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jax.nn.gelu(x @ params["w_in"] + params["b_in"])
+    return h @ params["w_out"] + params["b_out"]

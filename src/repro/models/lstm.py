@@ -1,0 +1,72 @@
+"""LEAF Shakespeare LSTM (paper Table 12) as a StageModel.
+
+Stage layout mirrors the paper's cut: embeddings + LSTM cells on the
+client, projection head on the server (cut = 2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module
+from repro.models.cnn import StageModel
+
+
+def _lstm_cell_init(key, d_in: int, d_h: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_x": module.dense_init(k1, d_in, 4 * d_h),
+        "w_h": module.dense_init(k2, d_h, 4 * d_h),
+        "b": jnp.zeros((4 * d_h,)),
+    }
+
+
+def _lstm_layer(params, x):
+    """x [B, S, d_in] -> hidden sequence [B, S, d_h]."""
+    B = x.shape[0]
+    d_h = params["w_h"].shape[0]
+
+    def step(carry, xt):
+        h, c = carry
+        z = xt @ params["w_x"] + h @ params["w_h"] + params["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((B, d_h))
+    (_, _), hs = jax.lax.scan(step, (h0, h0), jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def shakespeare_lstm(vocab: int = 80, d_embed: int = 8,
+                     d_h: int = 256, n_lstm: int = 2) -> StageModel:
+    """Stages: [embed, lstm-stack, head].  Cut=2 keeps embed+LSTM on the
+    client, the linear head on the server — the paper's Shakespeare cut."""
+
+    def emb_init(k):
+        return {"table": module.embed_init(k, vocab, d_embed)}
+
+    def emb(p, ids):
+        return jnp.take(p["table"], ids, axis=0)
+
+    def lstm_init(k):
+        keys = jax.random.split(k, n_lstm)
+        return {"cells": [
+            _lstm_cell_init(keys[i], d_embed if i == 0 else d_h, d_h)
+            for i in range(n_lstm)]}
+
+    def lstm(p, x):
+        for cell in p["cells"]:
+            x = _lstm_layer(cell, x)
+        return x[:, -1]                     # last hidden state
+
+    def head_init(k):
+        return {"w": module.dense_init(k, d_h, vocab)}
+
+    def head(p, x):
+        return x @ p["w"]
+
+    return StageModel("shakespeare_lstm",
+                      [(emb_init, emb), (lstm_init, lstm), (head_init, head)],
+                      vocab)

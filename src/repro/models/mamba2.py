@@ -1,0 +1,198 @@
+"""Mamba-2 block: SSD (state-space duality) with chunked scan.
+
+Reference: *Transformers are SSMs* (arXiv:2405.21060).  The chunked SSD
+computation here is the pure-jnp oracle for the Pallas ``ssd_scan``
+kernel; the block wrapper (projections, depthwise causal conv, gating)
+is shared by the pure-SSM (mamba2-2.7b) and hybrid (zamba2) archs.
+
+Layout: x [B, L, H, P] (heads x head_dim), B/C [B, L, G, N] (groups x
+state), dt [B, L, H], A [H] negative reals.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models import module
+from repro.models.layers import rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------- SSD core
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.  Returns y [B, L, H, P] and final state
+    h [B, H, N, P].  Pure-jnp; serves as the Pallas kernel oracle.
+
+    Chunks are processed with a *sequential* checkpointed ``lax.scan``
+    (perf iteration 2, EXPERIMENTS.md §Perf): only one chunk's [Q,Q,H]
+    decay/score tensors are live at a time, so peak temp is
+    O(B·Q²·H) instead of O(B·L/Q·Q²·H) = O(B·L·Q·H).
+    """
+    Bsz, L, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert L % chunk == 0, f"L={L} not divisible by chunk={chunk}"
+    nc, Q = L // chunk, chunk
+    rep = H // G
+    Af = A.astype(jnp.float32)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+
+    # [nc, B, Q, ...] chunk-major layouts for the scan
+    def cm_(a, tail):
+        return jnp.moveaxis(a.reshape((Bsz, nc, Q) + tail), 1, 0)
+
+    xf = cm_(x.astype(jnp.float32), (H, Pd))
+    dtf = cm_(dt.astype(jnp.float32), (H,))
+    Bf = cm_(Bm.astype(jnp.float32), (G, N))
+    Cf = cm_(Cm.astype(jnp.float32), (G, N))
+
+    @jax.checkpoint
+    def step(h, inp):
+        xc, dtc, bc, cc = inp                      # [B,Q,H,P],[B,Q,H],[B,Q,G,N]x2
+        bc = jnp.repeat(bc, rep, axis=2)           # [B,Q,H,N]
+        cc = jnp.repeat(cc, rep, axis=2)
+        dA = dtc * Af                              # [B,Q,H] (<= 0)
+        cum = jnp.cumsum(dA, axis=1)
+        # intra-chunk dual form (double-where keeps backward NaN-free)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]       # [B,Qi,Qj,H]
+        lmat = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
+        w = jnp.einsum("bqhn,bkhn->bqkh", cc, bc) * lmat * dtc[:, None, :, :]
+        y = jnp.einsum("bqkh,bkhp->bqhp", w, xc)
+        # inter-chunk contribution from the carried state
+        y = y + jnp.einsum("bqhn,bhnp->bqhp", cc * jnp.exp(cum)[..., None], h)
+        # state update
+        last = cum[:, -1:, :]                                # [B,1,H]
+        seg = jnp.exp(last - cum)
+        h = (jnp.exp(last[:, 0])[:, :, None, None] * h
+             + jnp.einsum("bqhn,bqh,bqhp->bhnp", bc, dtc * seg, xc))
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+    h_final, ys = jax.lax.scan(step, h0, (xf, dtf, Bf, Cf))  # ys [nc,B,Q,H,P]
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, L, H, Pd)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(h, x, dt, A, Bm, Cm):
+    """Single-token SSD update.  h [B,H,N,P]; x [B,H,P]; dt [B,H];
+    B/C [B,G,N].  Returns (y [B,H,P], h')."""
+    G = Bm.shape[1]
+    rep = x.shape[1] // G
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)      # [B,H,N]
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))                 # [B,H]
+    dBx = jnp.einsum("bh,bhn,bhp->bhnp", dtf, Bf, x.astype(jnp.float32))
+    h = dA[:, :, None, None] * h + dBx
+    y = jnp.einsum("bhn,bhnp->bhp", Cf, h)
+    return y.astype(x.dtype), h
+
+
+# ------------------------------------------------------------- block level
+class MambaState(NamedTuple):
+    """Decode-time recurrent state for a stack of mamba blocks.
+    h: [L, B, H, N, P]; conv: [L, B, d_conv-1, conv_ch]."""
+    h: jax.Array
+    conv: jax.Array
+
+
+def _conv_channels(cfg: ArchConfig) -> int:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    return d_inner + 2 * s.n_groups * s.d_state
+
+
+def mamba_init(key, cfg: ArchConfig, dtype):
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    conv_ch = _conv_channels(cfg)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + H
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_in": module.dense_init(k1, d, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(k2, (s.d_conv, conv_ch), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": rmsnorm_init(d_inner, dtype),
+        "w_out": module.dense_init(k3, d_inner, d, dtype),
+    }
+
+
+def _split_in_proj(cfg: ArchConfig, zxbcdt):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    gN = s.n_groups * s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + d_inner + 2 * gN], axis=-1)
+    return z, xbc, dt, d_inner, H, gN
+
+
+def _causal_conv(w, b, xbc):
+    """Depthwise causal conv over time.  xbc [B, L, C]; w [K, C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(y + b)
+
+
+def mamba_forward(params, cfg: ArchConfig, x):
+    """Full-sequence forward of one mamba2 block.  x [B, L, d]."""
+    s = cfg.ssm
+    zxbcdt = x @ params["w_in"]
+    z, xbc, dt, d_inner, H, gN = _split_in_proj(cfg, zxbcdt)
+    xbc = _causal_conv(params["conv_w"], params["conv_b"], xbc)
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + gN], axis=-1)
+    Bsz, L = x.shape[0], x.shape[1]
+    xs = xs.reshape(Bsz, L, H, s.head_dim)
+    Bm = Bm.reshape(Bsz, L, s.n_groups, s.d_state)
+    Cm = Cm.reshape(Bsz, L, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+    chunk = min(s.chunk, L)
+    y, h = ssd_chunked(xs, dt, A, Bm, Cm, chunk)
+    y = y + xs * params["D"][:, None].astype(xs.dtype)
+    y = y.reshape(Bsz, L, d_inner)
+    y = rmsnorm(params["gate_norm"], y) * jax.nn.silu(z)
+    return y @ params["w_out"], h
+
+
+def mamba_decode(params, cfg: ArchConfig, x, h, conv_state):
+    """One-token decode.  x [B, 1, d]; h [B,H,N,P]; conv_state
+    [B, d_conv-1, conv_ch].  Returns (y [B,1,d], h', conv_state')."""
+    s = cfg.ssm
+    zxbcdt = x[:, 0] @ params["w_in"]                      # [B, d_in_proj]
+    z, xbc, dt, d_inner, H, gN = _split_in_proj(cfg, zxbcdt)
+    # conv over [conv_state; xbc]
+    w, b = params["conv_w"], params["conv_b"]
+    K = w.shape[0]
+    full = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)   # [B,K,C]
+    y_conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", full, w) + b)
+    conv_state = full[:, 1:]
+    xs, Bm, Cm = jnp.split(y_conv, [d_inner, d_inner + gN], axis=-1)
+    Bsz = x.shape[0]
+    xs = xs.reshape(Bsz, H, s.head_dim)
+    Bm = Bm.reshape(Bsz, s.n_groups, s.d_state)
+    Cm = Cm.reshape(Bsz, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+    y, h = ssd_decode_step(h, xs, dt, A, Bm, Cm)
+    y = y + xs * params["D"][:, None].astype(xs.dtype)
+    y = y.reshape(Bsz, d_inner)
+    y = rmsnorm(params["gate_norm"], y) * jax.nn.silu(z)
+    return (y @ params["w_out"])[:, None, :], h, conv_state
+
+
+def mamba_state_init(cfg: ArchConfig, n_blocks: int, batch: int, dtype):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return MambaState(
+        h=jnp.zeros((n_blocks, batch, H, s.d_state, s.head_dim), jnp.float32),
+        conv=jnp.zeros((n_blocks, batch, s.d_conv - 1, _conv_channels(cfg)), dtype),
+    )

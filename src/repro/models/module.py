@@ -1,0 +1,40 @@
+"""Tiny functional-module helpers (no flax): initializers + RNG plumbing."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rng_seq(key, n: int):
+    """Split a key into n keys (deterministic fan-out)."""
+    return list(jax.random.split(key, n))
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    """Truncated-normal fan-in init (LeCun-style) used for all projections."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(d_in)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32)
+    return (w * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d), jnp.float32)
+    return (w * 0.02).astype(dtype)
+
+
+def stacked_init(init_fn, key, n: int):
+    """vmap an init over a leading layer dim -> stacked params for lax.scan."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def zeros(shape: Sequence[int], dtype=jnp.float32):
+    return jnp.zeros(tuple(shape), dtype)
+
+
+def ones(shape: Sequence[int], dtype=jnp.float32):
+    return jnp.ones(tuple(shape), dtype)

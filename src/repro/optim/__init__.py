@@ -1,0 +1,2 @@
+from repro.optim.optimizer import Optimizer, adam, sgd, clip_by_global_norm
+from repro.optim import schedule

@@ -1,0 +1,86 @@
+"""Minimal pure-function optimizers over pytrees (no optax).
+
+An ``Optimizer`` is an (init, update) pair:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+The paper uses Adam everywhere ("less sensitive to learning rate", §4.1)
+with *independent* optimizers per entity: each client owns an Adam state
+for its θ_C, the server owns one for θ_S — that independence is load-
+bearing for CycleSL's "standalone higher-level task" framing, so the
+optimizer state is explicitly part of each entity's state in repro.core.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]   # (grads, state, params, step)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def sgd(lr: float | Callable[[Any], Any], momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params=None, step=0):
+        lr_t = sched(step)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads), state
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        return jax.tree.map(lambda m: -lr_t * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float | Callable[[Any], Any], b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params=None, step=0):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], gf)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], gf)
+        mh = jax.tree.map(lambda x: x / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda x: x / (1 - b2 ** t), v)
+        lr_t = sched(step)
+        upd = jax.tree.map(
+            lambda mm, vv: -lr_t * mm / (jnp.sqrt(vv) + eps), mh, vh)
+        if weight_decay and params is not None:
+            upd = jax.tree.map(
+                lambda u, p: u - lr_t * weight_decay * p.astype(jnp.float32),
+                upd, params)
+        return upd, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    gn = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn

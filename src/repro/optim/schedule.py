@@ -1,0 +1,25 @@
+"""Learning-rate schedules as step -> lr functions."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(1.0, s / jnp.maximum(1, warmup))
+        prog = jnp.clip((s - warmup) / jnp.maximum(1, total - warmup), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, lr * cos)
+    return f
+
+
+def exponential_decay(lr: float, decay: float, every: int):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        return lr * decay ** (s / every)
+    return f

@@ -1,0 +1,2 @@
+from repro.sharding.specs import (param_specs, named_shardings, batch_spec,
+                                  shard_if_divisible, RULES)

@@ -1,0 +1,187 @@
+"""Path-regex sharding rules (t5x-style) for every repro model.
+
+The production mesh is (data=16, model=16) per pod; multi-pod adds a
+leading 'pod' axis used for batch/cohort parallelism only.  Weights are
+sharded 2-D: FSDP over 'data' + tensor-parallel over 'model' — this is
+what lets grok-1-314b fit 16 GiB/chip (DESIGN.md §3).
+
+Rules give a spec *template for the trailing dims* of a leaf; leading
+dims (stacked layer dim, stacked client dim in the CycleSL cohort) are
+handled by role:
+
+  role='server'/'full' — stacked-layer leading dim replicated.
+  role='client'        — an extra leading cohort dim sharded over
+                         ('pod','data'); the 'data' FSDP component inside
+                         the rule is dropped (an axis may appear once).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.tree import map_with_path
+
+# (regex over '/'-joined leaf path, trailing-dims spec template)
+# templates use axis names; None = replicated dim.
+RULES: list[tuple[str, tuple]] = [
+    # embeddings / heads
+    (r"embed/table$", ("model", "data")),
+    (r"lm_head/w$", ("data", "model")),
+    (r"(encoder|decoder)/pos$", (None, "data")),
+    # attention projections
+    (r"attn/wq$", ("data", "model")),
+    (r"attn/wk$", ("data", "model")),
+    (r"attn/wv$", ("data", "model")),
+    (r"attn/wo$", ("model", "data")),
+    # dense ffn
+    (r"ffn/w_gate$", ("data", "model")),
+    (r"ffn/w_up$", ("data", "model")),
+    (r"ffn/w_down$", ("model", "data")),
+    (r"ffn/w_in$", ("data", "model")),
+    (r"ffn/b_in$", ("model",)),
+    (r"ffn/w_out$", ("model", "data")),
+    # moe (expert-parallel by default; grok overrides via shard_mode)
+    (r"moe/router$", ("data", None)),
+    (r"moe/w_gate$", ("model", "data", None)),
+    (r"moe/w_up$", ("model", "data", None)),
+    (r"moe/w_down$", ("model", None, "data")),
+    # mamba2
+    (r"mamba/w_in$", ("data", "model")),
+    (r"mamba/conv_w$", (None, "model")),
+    (r"mamba/w_out$", ("model", "data")),
+    (r"mamba/(a_log|dt_bias|D)$", ("model",)),
+    (r"mamba/gate_norm/scale$", ("model",)),
+    # everything else (norms, biases, conv_b): replicated
+    (r".*", ()),
+]
+
+MOE_FFN_MODE_RULES: list[tuple[str, tuple]] = [
+    (r"moe/w_gate$", (None, "data", "model")),
+    (r"moe/w_up$", (None, "data", "model")),
+    (r"moe/w_down$", (None, "model", "data")),
+]
+
+
+def shard_if_divisible(dim: int, axis: Optional[str], mesh: Mesh):
+    """Drop a sharding axis when the dim doesn't divide the axis size."""
+    if axis is None:
+        return None
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        if a not in mesh.shape:
+            return None
+        size *= mesh.shape[a]
+    return axis if dim % size == 0 else None
+
+
+def _spec_for(path: str, shape: Sequence[int], mesh: Mesh,
+              rules: list[tuple[str, tuple]], role: str) -> P:
+    template: tuple = ()
+    for pat, tpl in rules:
+        if re.search(pat, path):
+            template = tpl
+            break
+    nd = len(shape)
+    nt = len(template)
+    lead = [None] * (nd - nt)
+    axes = list(lead) + list(template[:nd])
+    if role == "client":
+        # drop 'data' (used by the cohort dim), then shard the leading
+        # cohort dim over ('pod','data') / 'data'.
+        axes = [None if a == "data" else a for a in axes]
+        cohort_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        if axes:
+            axes[0] = cohort_axes if len(cohort_axes) > 1 else (
+                cohort_axes[0] if cohort_axes else None)
+    # divisibility guard, per dim
+    out = []
+    for d, a in zip(shape, axes):
+        out.append(shard_if_divisible(d, a, mesh) if a is not None else None)
+    return P(*out)
+
+
+def param_specs(params, mesh: Mesh, role: str = "full",
+                moe_shard_mode: str = "expert"):
+    """Pytree of PartitionSpec matching ``params``.
+
+    role: 'full'/'server' — plain model params;
+          'client'        — params stacked with a leading cohort dim.
+    """
+    rules = RULES
+    if moe_shard_mode == "ffn":
+        rules = MOE_FFN_MODE_RULES + RULES
+    return map_with_path(
+        lambda path, leaf: _spec_for(path, leaf.shape, mesh, rules, role),
+        params)
+
+
+def named_shardings(params, mesh: Mesh, role: str = "full",
+                    moe_shard_mode: str = "expert"):
+    specs = param_specs(params, mesh, role, moe_shard_mode)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------------
+# Activation-batch constraints.  GSPMD propagates FSDP *weight*
+# shardings into activations (the 'data' axis lands on d_model and the
+# batch dim silently replicates — §Perf iteration 5).  Model code calls
+# ``constrain_batch`` after the embedding and after every block group;
+# the launcher registers the mesh here before tracing.
+_ACTIVATION_MESH: Mesh | None = None
+
+
+def set_activation_mesh(mesh: Mesh | None):
+    global _ACTIVATION_MESH
+    _ACTIVATION_MESH = mesh
+
+
+def get_activation_mesh():
+    return _ACTIVATION_MESH
+
+
+def constrain_batch(x, batch_dims: int = 1):
+    """Constrain the leading dim(s) of an activation to the batch axes.
+
+    batch_dims=2 handles cohort-stacked [C, b, ...] activations: C takes
+    the batch axes, b stays unsharded.  No-op when no mesh registered
+    (CPU tests) or the dim doesn't divide.
+    """
+    mesh = _ACTIVATION_MESH
+    if mesh is None or not hasattr(x, "ndim") or x.ndim < batch_dims + 1:
+        return x
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if not axes or x.shape[0] % size != 0:
+        axes = ("data",) if "data" in mesh.shape else ()
+        size = mesh.shape.get("data", 1) if axes else 1
+        if not axes or x.shape[0] % size != 0:
+            return x
+    lead = axes if len(axes) > 1 else axes[0]
+    spec = P(lead, *([None] * (x.ndim - 1)))
+    try:
+        from jax.sharding import NamedSharding
+        from jax.lax import with_sharding_constraint
+        return with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except Exception:  # outside jit/mesh context
+        return x
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """Shard the leading batch dim over ('pod','data') if divisible."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if not axes or batch % size != 0:
+        # try 'data' alone
+        if "data" in mesh.shape and batch % mesh.shape["data"] == 0:
+            return P("data", *([None] * extra_dims))
+        return P(*([None] * (1 + extra_dims)))
+    lead = axes if len(axes) > 1 else axes[0]
+    return P(lead, *([None] * extra_dims))

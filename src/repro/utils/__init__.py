@@ -1,0 +1,2 @@
+from repro.utils import tree
+from repro.utils import hlo

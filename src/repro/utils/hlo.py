@@ -1,0 +1,163 @@
+"""HLO-text analysis: collective-traffic accounting for the roofline.
+
+``compiled.cost_analysis()`` reports FLOPs and memory bytes but not
+collective traffic, so we parse the (optimized) HLO text and sum operand
+sizes for every communication op.  This is the data source for the
+"collective term" of the roofline in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+# dtype -> bytes per element
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+# one shape like bf16[2,4,8] (layout annotations stripped beforehand)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_LAYOUT_RE = re.compile(r"\{[^{}]*\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[d0,d1,...]' string."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _all_shapes_bytes(text: str) -> int:
+    """Sum of every shape literal appearing in `text` (handles tuples)."""
+    return sum(
+        _shape_bytes(m.group(0)) for m in _SHAPE_RE.finditer(text)
+    )
+
+
+@dataclass
+class CollectiveStats:
+    """Aggregated collective traffic of one compiled program."""
+
+    bytes_by_kind: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    count_by_kind: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    ops: list[tuple[str, str, int]] = field(default_factory=list)  # (kind, line, bytes)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "total_count": self.total_count,
+            "by_kind": {k: dict(bytes=v, count=self.count_by_kind[k])
+                        for k, v in sorted(self.bytes_by_kind.items())},
+        }
+
+
+def collective_stats(hlo_text: str, keep_ops: bool = False) -> CollectiveStats:
+    """Parse HLO text; sum operand bytes of every collective op.
+
+    We resolve operand names against a symbol table built from the full
+    module so operand (not result) sizes are counted, per the roofline
+    definition.  Fusions and `-start`/`-done` async pairs are handled by
+    counting the `-start` (or plain) op only.
+    """
+    # pass 1: symbol table  name -> operand bytes of its defining shape
+    sym: dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    stripped_lines = []
+    for ln in lines:
+        s = _LAYOUT_RE.sub("", ln)
+        stripped_lines.append(s)
+        m = _DEF_RE.match(s)
+        if m:
+            name, rhs = m.groups()
+            # shape(s) are everything before the op name; just grab all
+            # shape literals in the rhs *before* the first '(' (the result
+            # type region).
+            head = rhs.split("(", 1)[0]
+            b = _all_shapes_bytes(head)
+            if b:
+                sym[name] = b
+
+    stats = CollectiveStats()
+    op_re = re.compile(
+        r"\b(" + "|".join(COLLECTIVE_OPS) + r")(-start)?\s*\("
+    )
+    for s in stripped_lines:
+        m = op_re.search(s)
+        if m is None:
+            continue
+        if re.search(r"\b(?:" + "|".join(COLLECTIVE_OPS) + r")-done\b", s):
+            continue  # async completion: already counted at -start
+        kind = m.group(1)
+        # operand list: inside the parens following the op name
+        args_str = s[m.end():]
+        depth, out = 1, []
+        for ch in args_str:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            out.append(ch)
+        args_str = "".join(out)
+        nbytes = 0
+        for arg in args_str.split(","):
+            arg = arg.strip().lstrip("%")
+            if arg in sym:
+                nbytes += sym[arg]
+            else:
+                # literal shape operand (rare) — count shapes inline
+                nbytes += _all_shapes_bytes(arg)
+        if nbytes == 0:
+            # fall back to the result shape on the lhs
+            dm = _DEF_RE.match(s)
+            if dm:
+                nbytes = _all_shapes_bytes(dm.group(2).split("(", 1)[0])
+        stats.bytes_by_kind[kind] += nbytes
+        stats.count_by_kind[kind] += 1
+        if keep_ops:
+            stats.ops.append((kind, s.strip()[:160], nbytes))
+    return stats
+
+
+def flops_and_bytes(cost_analysis: dict) -> tuple[float, float]:
+    """Extract (flops, bytes accessed) from compiled.cost_analysis()."""
+    if cost_analysis is None:
+        return 0.0, 0.0
+    flops = float(cost_analysis.get("flops", 0.0))
+    b = float(cost_analysis.get("bytes accessed", 0.0))
+    return flops, b

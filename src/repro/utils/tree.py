@@ -1,0 +1,92 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def param_count(tree: Any) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree: Any) -> int:
+    """Total bytes of a pytree (uses each leaf's dtype)."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def tree_paths(tree: Any) -> list[str]:
+    """Flattened '/'-joined string paths for every leaf."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [path_str(kp) for kp, _ in flat]
+
+
+def path_str(keypath) -> str:
+    parts = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where fn receives ('a/b/c', leaf)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: fn(path_str(kp), x), tree
+    )
+
+
+def tree_slice(tree: Any, start: int, stop: int | None = None) -> Any:
+    """Slice every leaf's leading dim: used to split stacked layer params."""
+    return jax.tree.map(lambda x: x[start:stop], tree)
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree: Any, s) -> Any:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_l2_norm(tree: Any):
+    """Global L2 norm of a pytree of arrays."""
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def global_norm_and_finite(tree: Any):
+    n = tree_l2_norm(tree)
+    return n, jnp.isfinite(n)
+
+
+def human_bytes(n: float) -> str:
+    if n <= 0:
+        return "0B"
+    units = ["B", "KiB", "MiB", "GiB", "TiB"]
+    i = min(len(units) - 1, int(math.log(n, 1024)))
+    return f"{n / 1024**i:.2f}{units[i]}"
+
+
+def human_count(n: float) -> str:
+    for unit, div in (("T", 1e12), ("B", 1e9), ("M", 1e6), ("K", 1e3)):
+        if n >= div:
+            return f"{n / div:.2f}{unit}"
+    return str(int(n))

@@ -1,0 +1,157 @@
+"""Per-kernel correctness: sweep shapes/dtypes, assert_allclose vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.feature_resample import feature_resample
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.topk_gating import topk_gating
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    x = RNG.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+FA_CASES = [
+    # B, Sq, Sk, H, Hkv, D, causal, window, softcap
+    (1, 128, 128, 4, 4, 64, True, None, None),
+    (2, 128, 128, 4, 2, 64, True, None, None),       # GQA
+    (1, 256, 256, 8, 1, 32, True, None, None),       # MQA
+    (2, 128, 128, 4, 4, 64, True, 32, None),         # sliding window
+    (1, 128, 128, 4, 2, 64, True, None, 50.0),       # softcap (gemma2)
+    (1, 64, 64, 2, 2, 128, False, None, None),       # bidirectional
+    (1, 192, 192, 4, 4, 64, True, 64, 30.0),         # window+cap
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES, ids=[str(c) for c in FA_CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(case, dtype):
+    B, Sq, Sk, H, Hkv, D, causal, window, cap = case
+    q = _rand((B, Sq, H, D), dtype)
+    k = _rand((B, Sk, Hkv, D), dtype)
+    v = _rand((B, Sk, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("blocks", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_shape_invariance(blocks):
+    bq, bk = blocks
+    q = _rand((1, 128, 4, 64), jnp.float32)
+    k = _rand((1, 128, 2, 64), jnp.float32)
+    v = _rand((1, 128, 2, 64), jnp.float32)
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+SSD_CASES = [
+    # B, L, H, P, N, chunk
+    (1, 128, 2, 32, 16, 32),
+    (2, 256, 3, 64, 32, 64),
+    (1, 64, 1, 16, 8, 64),      # single chunk
+    (2, 128, 4, 32, 16, 128),   # chunk == L
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES, ids=[str(c) for c in SSD_CASES])
+def test_ssd_scan_vs_ref(case):
+    B, L, H, P, N, chunk = case
+    x = _rand((B, L, H, P), jnp.float32)
+    dt = jax.nn.softplus(_rand((B, L, H), jnp.float32))
+    A = -jnp.exp(_rand((H,), jnp.float32))
+    Bm = _rand((B, L, H, N), jnp.float32)
+    Cm = _rand((B, L, H, N), jnp.float32)
+    y = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    want, _ = ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               atol=5e-3, rtol=5e-3)
+
+
+def test_ssd_scan_matches_model_chunked():
+    """Kernel also agrees with the chunked model implementation."""
+    from repro.models.mamba2 import ssd_chunked
+    B, L, H, P, N = 1, 128, 2, 32, 16
+    x = _rand((B, L, H, P), jnp.float32)
+    dt = jax.nn.softplus(_rand((B, L, H), jnp.float32))
+    A = -jnp.exp(_rand((H,), jnp.float32))
+    Bm = _rand((B, L, 1, N), jnp.float32)       # grouped
+    Cm = _rand((B, L, 1, N), jnp.float32)
+    y_model, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=32)
+    BmH = jnp.repeat(Bm, H, axis=2)
+    CmH = jnp.repeat(Cm, H, axis=2)
+    y_kernel = ssd_scan(x, dt, A, BmH, CmH, chunk=32)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
+                               atol=5e-3, rtol=5e-3)
+
+
+@pytest.mark.parametrize("T,E,k,bt", [(256, 8, 2, 64), (512, 64, 8, 128),
+                                      (128, 4, 4, 128), (1024, 16, 1, 256)])
+def test_topk_gating_vs_ref(T, E, k, bt):
+    logits = _rand((T, E), jnp.float32)
+    w, ids = topk_gating(logits, k, block_t=min(bt, T))
+    wr, ir = ref.topk_gating_ref(logits, k)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(wr), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ir))
+
+
+@pytest.mark.parametrize("T,D,M", [(64, 32, 64), (300, 128, 128), (128, 8, 37)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_feature_resample_vs_ref(T, D, M, dtype):
+    src = jnp.asarray(RNG.normal(size=(T, D)) * 10, dtype)
+    idx = jnp.asarray(RNG.integers(0, T, size=M), jnp.int32)
+    out = feature_resample(src, idx)
+    want = ref.feature_resample_ref(src, idx)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape,step,wd", [((64,), 0, 0.0), ((33, 7), 5, 0.0),
+                                           ((128, 16), 100, 0.01),
+                                           ((70001,), 3, 0.0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_adam_vs_ref(shape, step, wd, dtype):
+    from repro.kernels.fused_adam import fused_adam
+    p = jnp.asarray(RNG.normal(size=shape), dtype)
+    g = jnp.asarray(RNG.normal(size=shape), dtype)
+    m = jnp.asarray(RNG.normal(size=shape) * 0.1, jnp.float32)
+    v = jnp.asarray(np.abs(RNG.normal(size=shape)) * 0.1, jnp.float32)
+    p2, m2, v2 = fused_adam(p, g, m, v, step, lr=1e-3, weight_decay=wd,
+                            block=4096)
+    pr, mr, vr = ref.fused_adam_ref(p, g, m, v, step, lr=1e-3,
+                                    weight_decay=wd)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(p2, np.float32),
+                               np.asarray(pr, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(mr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(vr), atol=1e-6)
+
+
+def test_fused_adam_matches_optim_adam():
+    """The kernel implements exactly repro.optim.adam's update rule."""
+    from repro.kernels.fused_adam import fused_adam
+    from repro.optim import adam
+    from repro.optim.optimizer import apply_updates
+    opt = adam(3e-3)
+    params = {"w": jnp.asarray(RNG.normal(size=(31,)), jnp.float32)}
+    grads = {"w": jnp.asarray(RNG.normal(size=(31,)), jnp.float32)}
+    state = opt.init(params)
+    upd, state2 = opt.update(grads, state, params, 7)
+    want = apply_updates(params, upd)
+    p2, m2, v2 = fused_adam(params["w"], grads["w"], state["m"]["w"],
+                            state["v"]["w"], 7, lr=3e-3, block=64)
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(want["w"]),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(state2["m"]["w"]),
+                               atol=1e-7)

@@ -1,0 +1,143 @@
+"""Model-substrate behaviour: decode parity, masking semantics, MoE."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.configs.base import AttnConfig
+from repro.models.attention import attend_full, attn_init
+from repro.models.encdec import EncDec
+from repro.models.moe import moe_apply, moe_init
+from repro.models.transformer import Transformer
+
+PARITY_ARCHS = ["phi3-mini-3.8b", "gemma2-2b", "glm4-9b", "mamba2-2.7b",
+                "zamba2-1.2b", "pixtral-12b", "moonshot-v1-16b-a3b",
+                "grok-1-314b", "olmoe-1b-7b"]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_decode_matches_teacher_forcing(arch):
+    """Step-by-step decode == full forward (MoE: high capacity factor so
+    no tokens drop — capacity dropping is batch-dependent by design)."""
+    cfg = smoke_config(arch)
+    if cfg.moe is not None:
+        cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = Transformer.init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    pe = (jnp.ones((B, cfg.n_patch_tokens, cfg.d_model)) * 0.01
+          if cfg.family == "vlm" else None)
+    full, _ = Transformer.forward(params, cfg, toks, pe)
+    state = Transformer.init_decode_state(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, state = Transformer.decode_step(params, cfg, toks[:, t:t + 1], state)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    if cfg.family == "vlm":
+        # decode path has no patch prefix; compare text-only region
+        full_t, _ = Transformer.forward(params, cfg, toks, None)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full_t),
+                                   atol=1e-3)
+    else:
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                                   atol=1e-3)
+
+
+def test_whisper_decode_parity():
+    cfg = smoke_config("whisper-base")
+    params = EncDec.init(jax.random.PRNGKey(0), cfg)
+    B, T, S = 2, 12, 6
+    frames = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model)) * 0.1
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    full = EncDec.forward(params, cfg, frames, toks)
+    state = EncDec.init_decode_state(params, cfg, frames, seq_len=S)
+    outs = []
+    for t in range(S):
+        lg, state = EncDec.decode_step(params, cfg, toks[:, t:t + 1], state)
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=1e-3)
+
+
+def test_causal_mask_blocks_future():
+    """Changing a future token must not change earlier logits."""
+    cfg = smoke_config("phi3-mini-3.8b")
+    params = Transformer.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 10), 0, cfg.vocab)
+    l1, _ = Transformer.forward(params, cfg, toks)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % cfg.vocab)
+    l2, _ = Transformer.forward(params, cfg, toks2)
+    np.testing.assert_allclose(np.asarray(l1[:, :-1]), np.asarray(l2[:, :-1]),
+                               atol=1e-5)
+    assert float(jnp.max(jnp.abs(l1[:, -1] - l2[:, -1]))) > 1e-6
+
+
+def test_sliding_window_limits_receptive_field():
+    """With window w, position t ignores tokens < t - w + 1."""
+    cfg = smoke_config("glm4-9b").with_(
+        attn=AttnConfig(window=4, pattern="local"))
+    params = Transformer.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab)
+    l1, _ = Transformer.forward(params, cfg, toks)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 3) % cfg.vocab)
+    l2, _ = Transformer.forward(params, cfg, toks2)
+    # position 11 is > 4 steps after 0 in every (windowed) layer; with
+    # 2 stacked layers information can still travel 2*(w-1) — use last pos
+    # far enough: receptive field = n_layers*(w-1) = 6 < 11.
+    np.testing.assert_allclose(np.asarray(l1[:, 11]), np.asarray(l2[:, 11]),
+                               atol=1e-4)
+
+
+def test_gemma2_softcap_bounds_logits():
+    cfg = smoke_config("gemma2-2b")
+    params = Transformer.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    logits, _ = Transformer.forward(params, cfg, toks)
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.attn.final_softcap + 1e-3
+
+
+def test_moe_capacity_drops_overflow(rng):
+    """With capacity_factor→0 every token drops: output ≈ 0 (plus shared)."""
+    cfg = smoke_config("olmoe-1b-7b")
+    mcfg = dataclasses.replace(cfg.moe, capacity_factor=1e-9)
+    params = moe_init(jax.random.PRNGKey(0), 16, mcfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    y, m = moe_apply(params, mcfg, x)
+    # capacity 1 minimum -> at most E tokens survive; most output rows zero
+    zero_rows = int(jnp.sum(jnp.all(y == 0, axis=-1)))
+    assert zero_rows >= 1
+
+
+def test_moe_load_metrics(rng):
+    cfg = smoke_config("olmoe-1b-7b")
+    params = moe_init(jax.random.PRNGKey(0), 16, cfg.moe, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    y, m = moe_apply(params, cfg.moe, x)
+    assert y.shape == x.shape
+    np.testing.assert_allclose(float(jnp.sum(m["load"])), 1.0, atol=1e-5)
+    assert float(m["aux_loss"]) >= 1.0 - 1e-5  # >= 1 by Cauchy-Schwarz
+
+
+def test_gqa_broadcast_matches_repeated_kv(rng):
+    """GQA attention == MHA with explicitly repeated KV heads."""
+    cfg = smoke_config("glm4-9b")              # kv=2, heads=4
+    params = attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 8, cfg.d_model)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    out, (k, v) = attend_full(params, cfg, x, pos, None)
+
+    cfg_mha = cfg.with_(n_kv_heads=cfg.n_heads)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    params_mha = dict(params)
+    params_mha["wk"] = jnp.concatenate([
+        params["wk"].reshape(cfg.d_model, cfg.n_kv_heads, cfg.hd)
+        .repeat(rep, axis=1).reshape(cfg.d_model, -1)], axis=-1)
+    params_mha["wv"] = jnp.concatenate([
+        params["wv"].reshape(cfg.d_model, cfg.n_kv_heads, cfg.hd)
+        .repeat(rep, axis=1).reshape(cfg.d_model, -1)], axis=-1)
+    out2, _ = attend_full(params_mha, cfg_mha, x, pos, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-5)

@@ -1,0 +1,167 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.feature_store import FeatureStore, gather_batch, resample_plan
+from repro.kernels import ref
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_init, softcap
+from repro.optim import adam
+from repro.utils.hlo import collective_stats
+from repro.utils.tree import param_count, tree_l2_norm
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(total=st.integers(8, 200), epochs=st.integers(1, 4),
+       batch=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_resample_plan_permutation_property(total, epochs, batch, seed):
+    """Every epoch draws without replacement and within range (Eq. 3)."""
+    batch = min(batch, total)
+    plan = resample_plan(jax.random.PRNGKey(seed), total, epochs, batch)
+    steps = total // batch
+    assert plan.shape == (epochs, steps, batch)
+    arr = np.asarray(plan)
+    assert arr.min() >= 0 and arr.max() < total
+    for e in range(epochs):
+        flat = arr[e].ravel()
+        assert len(np.unique(flat)) == len(flat)   # no replacement
+
+
+@given(c=st.integers(1, 5), b=st.integers(1, 8), d=st.integers(1, 8),
+       seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_feature_store_pool_gather_roundtrip(c, b, d, seed):
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.normal(size=(c, b, d)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 5, size=(c, b)))
+    store = FeatureStore.pool(f, y)
+    idx = jnp.arange(store.size)
+    got_f, got_y = gather_batch(store, idx)
+    np.testing.assert_allclose(np.asarray(got_f),
+                               np.asarray(f.reshape(-1, d)), atol=0)
+    np.testing.assert_array_equal(np.asarray(got_y),
+                                  np.asarray(y.reshape(-1)))
+
+
+@given(s=st.integers(2, 32), h=st.integers(1, 4),
+       dh=st.sampled_from([4, 8, 16]), seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_rope_preserves_norm(s, h, dh, seed):
+    """Rotary embedding is a rotation: per-head vector norms unchanged."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, s, h, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (1, s))
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-4)
+
+
+@given(cap=st.floats(1.0, 100.0), seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_softcap_bounds(cap, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)) * 1000, jnp.float32)
+    y = softcap(x, cap)
+    assert float(jnp.max(jnp.abs(y))) <= cap * (1 + 1e-6)
+    # monotone up to f32 rounding at tanh saturation (eps scales with cap)
+    xs = jnp.sort(x)
+    assert bool(jnp.all(jnp.diff(softcap(xs, cap)) >= -1e-5 * cap))
+
+
+@given(d=st.sampled_from([4, 16, 64]), scale=st.floats(0.5, 10.0),
+       seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_rmsnorm_scale_invariance(d, scale, seed):
+    """RMSNorm(s·x) ≈ RMSNorm(x) — exact up to the eps regularizer, so
+    keep inputs with var >> eps and scale >= 0.5."""
+    rng = np.random.default_rng(seed)
+    p = rmsnorm_init(d)
+    x = jnp.asarray(rng.normal(size=(3, d)) * 2.0 + 0.5, jnp.float32)
+    a = rmsnorm(p, x)
+    b = rmsnorm(p, x * scale)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=5e-3, rtol=5e-3)
+
+
+@given(t=st.integers(1, 64), e=st.sampled_from([4, 8, 16]),
+       k=st.integers(1, 4), seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_topk_gating_ref_properties(t, e, k, seed):
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(t, e)), jnp.float32)
+    w, ids = ref.topk_gating_ref(logits, k)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), np.ones(t), atol=1e-5)
+    assert bool((w >= 0).all())
+    # ids are distinct per token
+    for row in np.asarray(ids):
+        assert len(set(row.tolist())) == k
+
+
+@given(seed=st.integers(0, 1000), steps=st.integers(1, 20))
+@settings(**SETTINGS)
+def test_adam_updates_bounded_by_lr(seed, steps):
+    """|Adam update| <= ~lr/(1-b1) per coordinate — stability invariant."""
+    rng = np.random.default_rng(seed)
+    opt = adam(1e-2)
+    params = {"w": jnp.zeros((8,))}
+    state = opt.init(params)
+    for s in range(steps):
+        g = {"w": jnp.asarray(rng.normal(size=8) * 10, jnp.float32)}
+        upd, state = opt.update(g, state, params, s)
+        assert float(jnp.max(jnp.abs(upd["w"]))) < 1e-2 * 10.5
+
+
+def test_collective_stats_parses_synthetic_hlo():
+    text = """
+ENTRY %main (p0: f32[128,8]) -> f32[128,8] {
+  %p0 = f32[128,8]{1,0} parameter(0)
+  %ag = f32[1024,8]{1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar = f32[128,8]{1,0} all-reduce(%p0), to_apply=%add
+  ROOT %out = f32[128,8]{1,0} copy(%ar)
+}
+"""
+    stats = collective_stats(text)
+    assert stats.count_by_kind["all-gather"] == 1
+    assert stats.bytes_by_kind["all-gather"] == 128 * 8 * 4
+    assert stats.bytes_by_kind["all-reduce"] == 128 * 8 * 4
+
+
+@given(c=st.integers(2, 6), seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_client_phase_is_cohort_permutation_equivariant(c, seed):
+    """Renaming clients permutes their gradients/updates 1:1 — the
+    aggregation-free symmetry of the frozen-server client phase (Eq. 5).
+    (The server inner loop itself is position-seeded by design, so the
+    full round is only equivariant in distribution.)"""
+    from repro.core.cyclesl import CycleConfig, client_updates, feature_gradients
+    from repro.core.protocol import broadcast_entity, init_entity
+    from repro.core.split import make_stage_task
+    from repro.models.cnn import mlp
+    from repro.optim import sgd
+
+    rng = np.random.default_rng(seed)
+    task = make_stage_task(mlp(6, [8], 3), cut=1)
+    opt = sgd(0.05)
+    server = init_entity(task.init_server(jax.random.PRNGKey(0)), opt)
+    clients = broadcast_entity(
+        init_entity(task.init_client(jax.random.PRNGKey(1)), opt), c)
+    xs = jnp.asarray(rng.normal(size=(c, 4, 6)), jnp.float32)
+    ys = jnp.asarray(rng.integers(0, 3, size=(c, 4)))
+    perm = np.asarray(rng.permutation(c))
+    ccfg = CycleConfig()
+
+    feats = jax.vmap(task.client_forward)(clients.params, xs)
+    g1 = feature_gradients(task, server.params, feats, ys, ccfg)
+    g2 = feature_gradients(task, server.params, feats[perm], ys[perm], ccfg)
+    np.testing.assert_allclose(np.asarray(g1)[perm], np.asarray(g2), atol=1e-6)
+
+    c1, _ = client_updates(task, clients, opt, xs, g1)
+    c2, _ = client_updates(task, clients, opt, xs[perm], g1[perm])
+    for a, b in zip(jax.tree.leaves(c1.params), jax.tree.leaves(c2.params)):
+        np.testing.assert_allclose(np.asarray(a)[perm], np.asarray(b),
+                                   atol=1e-5)

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned archs: instantiate the REDUCED variant
+(<=2 layers, d_model<=512, <=4 experts — zamba2 uses 4 mamba blocks to
+exercise the shared-attention interleave), run one forward *and* one
+CycleSL train round on CPU, assert output shapes and finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_config, list_archs, smoke_config
+from repro.core.cyclesl import CycleConfig, cyclesl_round
+from repro.core.protocol import broadcast_entity, init_entity
+from repro.core.split import make_transformer_task
+from repro.launch.steps import make_whisper_task
+from repro.models.encdec import EncDec
+from repro.models.transformer import Transformer
+from repro.optim import adam
+
+ARCHS = list_archs()
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    expected = {
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "mamba2-2.7b": (64, 2560, 1, 1, 0, 50280),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected, f"{arch}: {got} != {expected}"
+    assert cfg.source
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_config_is_reduced(arch):
+    cfg = smoke_config(arch)
+    assert cfg.n_layers <= 4
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = smoke_config(arch)
+    B, S = 2, 16
+    key = jax.random.PRNGKey(0)
+    if cfg.family == "audio":
+        params = EncDec.init(key, cfg)
+        frames = jax.random.normal(key, (B, 8, cfg.enc_d_model)) * 0.1
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        logits = EncDec.forward(params, cfg, frames, toks)
+    else:
+        params = Transformer.init(key, cfg)
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        pe = (jnp.ones((B, cfg.n_patch_tokens, cfg.d_model)) * 0.01
+              if cfg.family == "vlm" else None)
+        logits, _ = Transformer.forward(params, cfg, toks, pe)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_cyclesl_train_round(arch):
+    """One CycleSL round on the reduced arch: loss finite, params move."""
+    cfg = smoke_config(arch)
+    C, b, S = 2, 2, 16
+    key = jax.random.PRNGKey(0)
+    opt = adam(1e-3)
+    if cfg.family == "audio":
+        task = make_whisper_task(cfg)
+        xs = {"frames": jax.random.normal(key, (C, b, 8, cfg.enc_d_model)) * 0.1}
+        ys = {"tokens": jax.random.randint(key, (C, b, S), 0, cfg.vocab),
+              "labels": jax.random.randint(key, (C, b, S), 0, cfg.vocab)}
+    else:
+        task = make_transformer_task(cfg)
+        xs = {"tokens": jax.random.randint(key, (C, b, S), 0, cfg.vocab)}
+        if cfg.family == "vlm":
+            xs["patch_embeds"] = jnp.ones(
+                (C, b, cfg.n_patch_tokens, cfg.d_model), jnp.float32) * 0.01
+        ys = jax.random.randint(jax.random.PRNGKey(1), (C, b, S), 0, cfg.vocab)
+    server = init_entity(task.init_server(jax.random.PRNGKey(2)), opt)
+    clients = broadcast_entity(
+        init_entity(task.init_client(jax.random.PRNGKey(3)), opt), C)
+    server2, clients2, metrics = cyclesl_round(
+        task, server, clients, opt, opt, xs, ys, jax.random.PRNGKey(4),
+        CycleConfig(server_epochs=1))
+    assert bool(jnp.isfinite(metrics["server_loss"]))
+    assert bool(jnp.isfinite(metrics["feat_grad_norm_mean"]))
+    # server and clients both moved
+    moved_s = any(bool(jnp.any(a != b)) for a, b in zip(
+        jax.tree.leaves(server.params), jax.tree.leaves(server2.params)))
+    moved_c = any(bool(jnp.any(a != b)) for a, b in zip(
+        jax.tree.leaves(clients.params), jax.tree.leaves(clients2.params)))
+    assert moved_s and moved_c
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if a != "whisper-base"])
+def test_smoke_decode_step(arch):
+    cfg = smoke_config(arch)
+    B = 2
+    params = Transformer.init(jax.random.PRNGKey(0), cfg)
+    state = Transformer.init_decode_state(cfg, B, seq_len=8)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, state2 = Transformer.decode_step(params, cfg, tok, state)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert int(state2["pos"]) == 1

@@ -1,0 +1,156 @@
+"""Substrate tests: optimizers, schedules, data pipeline, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint, latest_step
+from repro.core.protocol import EntityState, entity_step, init_entity
+from repro.data.federated import FederatedDataset, sample_cohort
+from repro.data.partition import dirichlet_partition, power_law_sizes
+from repro.data.synthetic import SyntheticCharLMTask, SyntheticImageTask
+from repro.optim import adam, clip_by_global_norm, sgd
+from repro.optim.optimizer import apply_updates
+from repro.optim.schedule import constant, cosine, exponential_decay
+
+
+# ---------------------------------------------------------------- optim
+def test_sgd_step_matches_formula():
+    params = {"w": jnp.ones((3,))}
+    grads = {"w": jnp.full((3,), 2.0)}
+    opt = sgd(0.1)
+    upd, _ = opt.update(grads, opt.init(params), params, 0)
+    np.testing.assert_allclose(np.asarray(apply_updates(params, upd)["w"]),
+                               np.ones(3) - 0.2, atol=1e-7)
+
+
+def test_adam_converges_on_quadratic():
+    opt = adam(0.1)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = init_entity(params, opt)
+    target = jnp.asarray([1.0, 2.0])
+    for _ in range(300):
+        g = {"w": 2 * (state.params["w"] - target)}
+        state = entity_step(state, g, opt)
+    np.testing.assert_allclose(np.asarray(state.params["w"]),
+                               np.asarray(target), atol=1e-2)
+
+
+def test_adam_bias_correction_first_step():
+    """First Adam step ≈ -lr * sign(g) regardless of gradient scale."""
+    opt = adam(1e-3)
+    for scale in (1e-4, 1.0, 1e4):
+        params = {"w": jnp.zeros(())}
+        upd, _ = opt.update({"w": jnp.asarray(scale)}, opt.init(params),
+                            params, 0)
+        np.testing.assert_allclose(float(upd["w"]), -1e-3, rtol=1e-3)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 3.0), "b": jnp.full((3,), 4.0)}
+    clipped, gn = clip_by_global_norm(grads, 1.0)
+    total = float(jnp.sqrt(sum(jnp.sum(x ** 2)
+                               for x in jax.tree.leaves(clipped))))
+    assert abs(total - 1.0) < 1e-5
+    assert float(gn) > 1.0
+
+
+def test_schedules_shapes():
+    assert float(constant(0.1)(100)) == pytest.approx(0.1)
+    cos = cosine(1.0, warmup=10, total=100)
+    assert float(cos(0)) == pytest.approx(0.0)
+    assert float(cos(10)) == pytest.approx(1.0, abs=1e-3)
+    assert float(cos(100)) == pytest.approx(0.1, abs=1e-3)
+    exp = exponential_decay(1.0, 0.5, 10)
+    assert float(exp(10)) == pytest.approx(0.5)
+
+
+# ----------------------------------------------------------------- data
+def test_dirichlet_partition_covers_everything(rng):
+    labels = rng.integers(0, 10, size=2000)
+    parts = dirichlet_partition(labels, 20, alpha=0.5, rng=rng)
+    assert len(parts) == 20
+    assert all(len(p) >= 2 for p in parts)
+
+
+def test_dirichlet_alpha_controls_skew(rng):
+    labels = rng.integers(0, 10, size=20000)
+
+    def skew(alpha):
+        parts = dirichlet_partition(labels, 50, alpha=alpha,
+                                    rng=np.random.default_rng(0))
+        stds = []
+        for p in parts:
+            hist = np.bincount(labels[p], minlength=10) / max(1, len(p))
+            stds.append(hist.std())
+        return np.mean(stds)
+
+    assert skew(0.1) > skew(1.0) > skew(np.inf) - 1e-9
+
+
+def test_power_law_sizes(rng):
+    sizes = power_law_sizes(100, 10_000, rng)
+    assert sizes.min() >= 8
+    assert sizes.max() > np.median(sizes) * 2  # heavy tail
+
+
+def test_federated_split_is_sample_wise(rng):
+    gen = SyntheticImageTask(n_clients=10, samples_per_client=30, seed=1)
+    x, y, owner, idx = gen.build()
+    fed = FederatedDataset.from_arrays(x, y, idx)
+    assert fed.n_clients == 10
+    for c in fed.clients:
+        assert len(c.x_test) >= 1 and len(c.x_train) >= 2
+    xs, ys = fed.test_arrays()
+    assert len(xs) == sum(len(c.x_test) for c in fed.clients)
+
+
+def test_cohort_sampling_rate(rng):
+    cohort = sample_cohort(1000, 0.05, rng)
+    assert len(cohort) == 50
+    assert len(np.unique(cohort)) == 50
+
+
+def test_charlm_task_builds(rng):
+    gen = SyntheticCharLMTask(n_clients=4, samples_per_client=16, seed=0)
+    x, y, owner, idx = gen.build()
+    assert x.shape == (64, gen.seq_len)
+    assert y.min() >= 0 and y.max() < gen.vocab
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32)},
+            "tup": (jnp.zeros(2), jnp.full((1,), 7.0))}
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 5, tree, metadata={"note": "x"})
+    save_checkpoint(d, 9, tree)
+    assert latest_step(d) == 9
+    restored, step = load_checkpoint(d, tree)
+    assert step == 9
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"w": jnp.zeros(1)}
+    for s in range(6):
+        save_checkpoint(d, s, tree, keep=3)
+    steps = sorted(int(p.split("_")[1]) for p in os.listdir(d))
+    assert steps == [3, 4, 5]
+
+
+def test_checkpoint_restores_entity_state(tmp_path):
+    opt = adam(1e-3)
+    st = init_entity({"w": jnp.ones((2, 2))}, opt)
+    st = entity_step(st, {"w": jnp.ones((2, 2))}, opt)
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, st)
+    restored, _ = load_checkpoint(d, st)
+    assert int(restored.step) == 1
+    np.testing.assert_allclose(np.asarray(restored.params["w"]),
+                               np.asarray(st.params["w"]))
