@@ -7,22 +7,16 @@ configurable) attendance, sample-wise test split, seeds {0..k}.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.algorithms import make_algorithm
+from repro.api import Engine, ExperimentConfig
 from repro.core.cyclesl import CycleConfig
-from repro.core.drift import GradStabilityTracker
 from repro.core.split import make_stage_task
-from repro.data.federated import FederatedDataset, sample_cohort
+from repro.data.federated import FederatedDataset
 from repro.data.synthetic import SyntheticImageTask
-from repro.launch.train import evaluate
 from repro.models.cnn import femnist_cnn, resnet9
-from repro.optim import adam
 
 
 @dataclass
@@ -70,46 +64,38 @@ def build(bc: BenchConfig, seed: int):
     return task, fed
 
 
+def experiment_config(bc: BenchConfig, algo_name: str, seed: int,
+                      collect_timing: bool = False) -> ExperimentConfig:
+    """The bench protocol as a frozen ExperimentConfig (its own per-round
+    key stream, via round_key_salt, keeps historical benchmark seeds)."""
+    return ExperimentConfig(
+        algo=algo_name, task="image", rounds=bc.rounds,
+        n_clients=bc.n_clients, attendance=bc.attendance, batch=bc.batch,
+        lr_server=bc.lr, lr_client=bc.lr, alpha=bc.alpha, seed=seed,
+        width=bc.width, cut=bc.cut, eval_every=bc.eval_every,
+        round_key_salt=7919, collect_timing=collect_timing,
+        cycle=CycleConfig(server_epochs=bc.server_epochs,
+                          server_batch=bc.server_batch))
+
+
 def run_algo(bc: BenchConfig, algo_name: str, seed: int,
              collect_timing: bool = False) -> dict:
     task, fed = build(bc, seed)
-    algo = make_algorithm(algo_name, task, adam(bc.lr), adam(bc.lr),
-                          CycleConfig(server_epochs=bc.server_epochs,
-                                      server_batch=bc.server_batch))
-    state = algo.init(jax.random.PRNGKey(seed), fed.n_clients)
-    rng = np.random.default_rng(seed + 1)
-    tracker = GradStabilityTracker()
-    accs, losses = [], []
-    rounds_to_threshold = None
-    server_time = 0.0
-    for rnd in range(bc.rounds):
-        cohort = sample_cohort(fed.n_clients, bc.attendance, rng, min_cohort=2)
-        xs = np.stack([fed.clients[c].sample_batch(rng, bc.batch)[0]
-                       for c in cohort])
-        ys = np.stack([fed.clients[c].sample_batch(rng, bc.batch)[1]
-                       for c in cohort])
-        t0 = time.time()
-        state, metrics = algo.round(state, jnp.asarray(cohort),
-                                    jnp.asarray(xs), jnp.asarray(ys),
-                                    jax.random.PRNGKey(seed * 7919 + rnd))
-        if collect_timing:
-            jax.block_until_ready(metrics["server_loss"])
-            if rnd > 0:          # skip compile round
-                server_time += time.time() - t0
-        tracker.update(metrics)
-        if (rnd + 1) % bc.eval_every == 0 or rnd == bc.rounds - 1:
-            loss, mets = evaluate(task, state, fed)
-            accs.append(mets["accuracy"])
-            losses.append(loss)
-            if rounds_to_threshold is None and mets["accuracy"] >= bc.threshold:
-                rounds_to_threshold = rnd + 1
+    cfg = experiment_config(bc, algo_name, seed, collect_timing)
+    res = Engine(cfg, task=task, fed=fed, metric_key="accuracy",
+                 log=lambda *a, **k: None).run()
+    accs = [h["accuracy"] for h in res["history"]]
+    losses = [h["test_loss"] for h in res["history"]]
+    rounds_to_threshold = next(
+        (h["round"] for h in res["history"] if h["accuracy"] >= bc.threshold),
+        None)
     return {
         "algo": algo_name, "seed": seed,
         "final_acc": accs[-1], "best_acc": max(accs),
         "final_loss": losses[-1],
         "rounds_to_threshold": rounds_to_threshold,
-        "grad_stability": tracker.summary(),
-        "round_time_s": server_time / max(1, bc.rounds - 1),
+        "grad_stability": res["grad_stability"],
+        "round_time_s": res.get("round_time_s", 0.0),
     }
 
 

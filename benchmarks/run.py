@@ -67,27 +67,23 @@ def bench_kernels() -> list[tuple[str, float, str]]:
 
 def bench_cyclesl_round() -> list[tuple[str, float, str]]:
     """Wall time of one jitted CycleSL round vs baselines (CPU, tiny)."""
-    from benchmarks.common import BenchConfig, build
-    from repro.core.algorithms import make_algorithm
-    from repro.core.cyclesl import CycleConfig
-    from repro.data.federated import sample_cohort
-    from repro.optim import adam
+    from benchmarks.common import BenchConfig, build, experiment_config
+    from repro.api import Engine
     bc = BenchConfig(width=8)
     task, fed = build(bc, 0)
-    rng = np.random.default_rng(0)
-    cohort = sample_cohort(fed.n_clients, bc.attendance, rng, min_cohort=2)
-    xs = jnp.asarray(np.stack([fed.clients[c].sample_batch(rng, bc.batch)[0]
-                               for c in cohort]))
-    ys = jnp.asarray(np.stack([fed.clients[c].sample_batch(rng, bc.batch)[1]
-                               for c in cohort]))
     rows = []
     for name in ("sflv2", "cyclesfl"):
-        algo = make_algorithm(name, task, adam(1e-3), adam(1e-3), CycleConfig())
-        state = algo.init(jax.random.PRNGKey(0), fed.n_clients)
-        key = jax.random.PRNGKey(1)
-        c = jnp.asarray(cohort)
-        t = _time_fn(lambda: algo.round(state, c, xs, ys, key)[1]["server_loss"],
-                     iters=3, warmup=1)
+        # donate=False: the timing loop re-feeds the same state buffers
+        eng = Engine(experiment_config(bc, name, 0), task=task, fed=fed,
+                     metric_key="accuracy", donate=False,
+                     log=lambda *a, **k: None)
+        state = eng.init_state()
+        rng = np.random.default_rng(0)
+        cohort, xs, ys = eng.sample_round(rng)
+        key, c = eng.round_key(1), jnp.asarray(cohort)
+        t = _time_fn(
+            lambda: eng.algo.round(state, c, xs, ys, key)[1]["server_loss"],
+            iters=3, warmup=1)
         rows.append((f"round_{name}", t, f"cohort={len(cohort)}"))
     return rows
 

@@ -1,23 +1,28 @@
 """Paper Table 5 ablation as a runnable example: server epochs E vs
 heterogeneity alpha for CycleSFL on the synthetic task.
 
+Each cell is one frozen :class:`ExperimentConfig` (the nested
+``CycleConfig`` carries E) run by the shared ``repro.api.Engine`` loop.
+
   PYTHONPATH=src python examples/ablation_server_epochs.py --rounds 40
 """
 import argparse
+from dataclasses import replace
 
-from repro.launch.train import run
+from repro.api import Engine, ExperimentConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=40)
     args = ap.parse_args()
+    base = ExperimentConfig(algo="cyclesfl", task="image",
+                            rounds=args.rounds, eval_every=args.rounds)
     print(f"{'alpha':>6s} {'E':>3s} {'test_loss':>10s} {'accuracy':>9s}")
     for alpha in (1.0, 0.1):
         for E in (1, 2, 4):
-            res = run("cyclesfl", task_name="image", rounds=args.rounds,
-                      alpha=alpha, server_epochs=E,
-                      eval_every=args.rounds, log=lambda *a, **k: None)
+            cfg = replace(base, alpha=alpha).with_cycle(server_epochs=E)
+            res = Engine(cfg, log=lambda *a, **k: None).run()
             h = res["history"][-1]
             print(f"{alpha:6.1f} {E:3d} {h['test_loss']:10.4f} "
                   f"{h['accuracy']:9.4f}")

@@ -1,6 +1,8 @@
 """End-to-end driver: cross-device split learning on a synthetic non-iid
 task — compares an SL baseline against its Cycle variant (paper Table 3,
-miniaturized).
+miniaturized) through the unified ``repro.api`` experiment API: one
+frozen :class:`ExperimentConfig` per run, swapped via ``dataclasses.replace``,
+all executed by the single ``Engine.run()`` driver loop.
 
 Trains two ~hundred-round runs on CPU (a few minutes):
 
@@ -8,8 +10,9 @@ Trains two ~hundred-round runs on CPU (a few minutes):
       --baseline sflv1 --rounds 80
 """
 import argparse
+from dataclasses import replace
 
-from repro.launch.train import run
+from repro.api import Engine, ExperimentConfig
 
 
 def main():
@@ -23,12 +26,14 @@ def main():
 
     cycle_of = {"psl": "cyclepsl", "sglr": "cyclesglr",
                 "sflv1": "cyclesfl", "sflv2": "cyclesfl"}
+    base_cfg = ExperimentConfig(
+        algo=args.baseline, task="image", rounds=args.rounds,
+        n_clients=args.clients, alpha=args.alpha, attendance=0.05,
+        eval_every=max(10, args.rounds // 8))
     results = {}
     for algo in (args.baseline, cycle_of[args.baseline]):
         print(f"\n=== {algo} ===")
-        res = run(algo, task_name="image", rounds=args.rounds,
-                  n_clients=args.clients, alpha=args.alpha,
-                  attendance=0.05, eval_every=max(10, args.rounds // 8))
+        res = Engine(replace(base_cfg, algo=algo)).run()
         results[algo] = res["history"][-1]
 
     base, cyc = args.baseline, cycle_of[args.baseline]

@@ -1,9 +1,19 @@
 """Quickstart: one CycleSL round, spelled out (paper Algorithm 1).
 
-Runs on CPU in ~a minute.  Shows the public API at its lowest level:
+Runs on CPU in ~a minute.  Shows the API at its lowest level:
 SplitTask -> EntityStates -> cyclesl_round, and prints what each phase
-did.  For the full training loop use ``repro.launch.train`` or
-``examples/cross_device_federated.py``.
+did.  The same round is registered declaratively in ``repro.api`` as
+
+    RoundProgram("cyclesfl", ExtractFeatures -> ServerUpdate(cycle)
+                 -> FeatureGradients(updated server) -> ClientUpdate
+                 -> Commit(average))
+
+and full experiments run through the single driver::
+
+    from repro.api import Engine, ExperimentConfig
+    Engine(ExperimentConfig(algo="cyclesfl", rounds=100)).run()
+
+(see ``examples/cross_device_federated.py``).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import get_program
 from repro.core.cyclesl import CycleConfig, cyclesl_round
 from repro.core.protocol import broadcast_entity, init_entity
 from repro.core.split import make_stage_task
@@ -58,6 +69,9 @@ def main():
     print("\nNote the cyclical order: the server optimized FIRST on the")
     print("resampled feature dataset; clients then received gradients from")
     print("the UPDATED, frozen server (Eq. 5) — not end-to-end backprop.")
+    print("\nThe same round, as registered in repro.api:")
+    for name in ("sflv1", "cyclesfl"):
+        print(f"  {name:9s} = {get_program(name).describe()}")
 
 
 if __name__ == "__main__":

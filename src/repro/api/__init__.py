@@ -1,0 +1,30 @@
+"""repro.api — the experiment/engine API.
+
+Three layers, one registry:
+
+* :mod:`repro.api.phases` — ``RoundProgram``: algorithms as declarative
+  compositions of typed phases over one ``TrainState`` pytree.
+* :mod:`repro.api.registry` / :mod:`repro.api.tasks` — name -> program
+  and name -> task tables every driver resolves through.
+* :mod:`repro.api.config` / :mod:`repro.api.engine` — frozen
+  ``ExperimentConfig`` + the single ``Engine.run()`` driver loop.
+"""
+from repro.api.config import ExperimentConfig
+from repro.api.engine import Engine, evaluate
+from repro.api.phases import (ClientUpdate, Commit, ExtractFeatures,
+                              FeatureGradients, Phase, PhaseContext,
+                              RoundProgram, RoundVars, ServerUpdate,
+                              SLAlgorithm, TrainState, build_algorithm,
+                              init_train_state)
+from repro.api.registry import (PROGRAMS, algorithm_names, get_program,
+                                register_program)
+from repro.api.tasks import TASKS, build_task, register_task, task_names
+
+__all__ = [
+    "ExperimentConfig", "Engine", "evaluate",
+    "Phase", "PhaseContext", "RoundProgram", "RoundVars", "TrainState",
+    "SLAlgorithm", "ExtractFeatures", "ServerUpdate", "FeatureGradients",
+    "ClientUpdate", "Commit", "build_algorithm", "init_train_state",
+    "PROGRAMS", "algorithm_names", "get_program", "register_program",
+    "TASKS", "build_task", "register_task", "task_names",
+]

@@ -1,0 +1,110 @@
+"""Frozen experiment description + builders (``from_dict``/``from_flags``).
+
+One :class:`ExperimentConfig` captures everything a run needs — the
+algorithm name (resolved through the program registry), the task name
+(resolved through the task registry), cohort/protocol knobs, the nested
+:class:`CycleConfig`, and eval/checkpoint cadence — and round-trips
+losslessly through ``to_dict``/``from_dict`` so configs can live in JSON
+sweep files.
+"""
+from __future__ import annotations
+
+import argparse
+from dataclasses import asdict, dataclass, field, fields, replace
+from typing import Optional
+
+from repro.core.cyclesl import CycleConfig
+
+
+@dataclass(frozen=True)
+class ExperimentConfig:
+    algo: str = "cyclesfl"
+    task: str = "image"
+    rounds: int = 100
+    n_clients: int = 100
+    attendance: float = 0.05          # partial participation rate (§4.1)
+    min_cohort: int = 2
+    batch: int = 16
+    lr_server: float = 1e-3
+    lr_client: float = 1e-3
+    alpha: float = 0.5                # Dirichlet label-skew strength
+    seed: int = 0
+    width: int = 16
+    cut: int = 2
+    eval_every: int = 20
+    ckpt_dir: Optional[str] = None
+    # per-round PRNG stream: key = PRNGKey(seed * round_key_salt + round)
+    round_key_salt: int = 100_000
+    collect_timing: bool = False      # block per round and report round_time_s
+    cycle: CycleConfig = field(default_factory=CycleConfig)
+
+    # ---------------------------------------------------------- builders
+    def to_dict(self) -> dict:
+        if self.cycle.batch_constraint is not None:
+            raise ValueError("CycleConfig.batch_constraint is a callable "
+                             "sharding hook and cannot be serialized")
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentConfig":
+        d = dict(d)
+        cycle = d.pop("cycle", {})
+        if not isinstance(cycle, CycleConfig):
+            cycle = CycleConfig(**cycle)
+        known = {f.name for f in fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise KeyError(f"unknown ExperimentConfig fields: {sorted(unknown)}")
+        return cls(cycle=cycle, **d)
+
+    def validate(self) -> "ExperimentConfig":
+        from repro.api.registry import PROGRAMS
+        from repro.api.tasks import TASKS
+        if self.algo.lower() not in PROGRAMS:
+            raise KeyError(f"unknown algorithm {self.algo!r}: "
+                           f"{sorted(PROGRAMS)}")
+        if self.task not in TASKS:
+            raise KeyError(f"unknown task {self.task!r}: {sorted(TASKS)}")
+        return self
+
+    # ------------------------------------------------------------- flags
+    @staticmethod
+    def add_arguments(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+        from repro.api.registry import algorithm_names
+        from repro.api.tasks import task_names
+        ap.add_argument("--algo", default="cyclesfl",
+                        choices=algorithm_names())
+        ap.add_argument("--task", default="image", choices=task_names())
+        ap.add_argument("--rounds", type=int, default=100)
+        ap.add_argument("--clients", type=int, default=100)
+        ap.add_argument("--attendance", type=float, default=0.05)
+        ap.add_argument("--batch", type=int, default=16)
+        ap.add_argument("--lr-server", type=float, default=1e-3)
+        ap.add_argument("--lr-client", type=float, default=1e-3)
+        ap.add_argument("--alpha", type=float, default=0.5)
+        ap.add_argument("--server-epochs", type=int, default=1)
+        ap.add_argument("--server-batch", type=int, default=None)
+        ap.add_argument("--grad-clip", type=float, default=None)
+        ap.add_argument("--seed", type=int, default=0)
+        ap.add_argument("--width", type=int, default=16)
+        ap.add_argument("--cut", type=int, default=2)
+        ap.add_argument("--eval-every", type=int, default=20)
+        ap.add_argument("--ckpt-dir", default=None)
+        return ap
+
+    @classmethod
+    def from_flags(cls, args: argparse.Namespace) -> "ExperimentConfig":
+        return cls(
+            algo=args.algo, task=args.task, rounds=args.rounds,
+            n_clients=args.clients, attendance=args.attendance,
+            batch=args.batch, lr_server=args.lr_server,
+            lr_client=args.lr_client, alpha=args.alpha, seed=args.seed,
+            width=args.width, cut=args.cut, eval_every=args.eval_every,
+            ckpt_dir=args.ckpt_dir,
+            cycle=CycleConfig(server_epochs=args.server_epochs,
+                              server_batch=args.server_batch,
+                              grad_clip=args.grad_clip),
+        ).validate()
+
+    def with_cycle(self, **kw) -> "ExperimentConfig":
+        return replace(self, cycle=replace(self.cycle, **kw))

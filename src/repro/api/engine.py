@@ -1,0 +1,178 @@
+"""The ONE driver loop every entrypoint shares.
+
+``Engine`` owns the cohort-sampling / round / eval / checkpoint cycle
+that ``launch/train.py``, ``benchmarks/*``, and the examples used to
+hand-roll: build (or accept) a task + federated dataset, compile the
+algorithm's RoundProgram into a jitted round (TrainState buffers donated
+off-CPU), then drive it for ``cfg.rounds`` rounds with the paper's
+protocol (partial attendance, sample-wise eval split, fixed per-round
+key stream).
+
+Pluggable callbacks observe the loop without forking it::
+
+    eng = Engine(ExperimentConfig(algo="cyclesfl", rounds=100))
+    result = eng.run()           # {"history": [...], "grad_stability": ...}
+
+Callbacks are any objects exposing ``on_round(engine, rnd, state,
+metrics)`` and/or ``on_eval(engine, rnd, loss, mets)``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import ExperimentConfig
+from repro.api.phases import SLAlgorithm, TrainState, build_algorithm
+from repro.api.registry import get_program
+from repro.api.tasks import build_task
+from repro.checkpoint import save_checkpoint
+from repro.core.drift import GradStabilityTracker
+from repro.core.split import SplitTask
+from repro.data.federated import FederatedDataset, sample_cohort
+from repro.optim import adam
+
+
+def evaluate(task, state, fed, batch: int = 256, max_batches: int = 8,
+             max_clients: int = 40):
+    """Test metrics matching the paper's protocol (§4.1).
+
+    SFL-family (global client model): pooled sample-wise test set.
+    PSL-family (per-client models, never aggregated): per-client
+    evaluation — each client's test samples are scored with THAT
+    client's model, sample-weighted (a mean of unsynced client models
+    is not a model anyone owns).
+    """
+    if state.client_global is not None:
+        cp = state.client_global.params
+        xs, ys = fed.test_arrays()
+        n = min(len(xs), batch * max_batches)
+        losses, mets, ws = [], [], []
+        for i in range(0, n, batch):
+            out = task.predict(cp, state.server.params,
+                               jnp.asarray(xs[i:i + batch]))
+            losses.append(float(task.loss(out, jnp.asarray(ys[i:i + batch]))))
+            mets.append({k: float(v) for k, v in
+                         task.metrics(out, jnp.asarray(ys[i:i + batch])).items()})
+            ws.append(len(xs[i:i + batch]))
+        agg = {k: float(np.average([m[k] for m in mets], weights=ws))
+               for k in mets[0]}
+        return float(np.average(losses, weights=ws)), agg
+
+    # per-client evaluation (vmapped: one trace, truncated to the common
+    # test size so client stacks are rectangular)
+    idxs = [i for i, c in enumerate(fed.clients) if len(c.x_test)][:max_clients]
+    t = min(len(fed.clients[i].x_test) for i in idxs)
+    xs = jnp.asarray(np.stack([fed.clients[i].x_test[:t] for i in idxs]))
+    ys = jnp.asarray(np.stack([fed.clients[i].y_test[:t] for i in idxs]))
+    cps = jax.tree.map(lambda x: x[np.asarray(idxs)], state.clients.params)
+    sp = state.server.params
+
+    def one(cp, x, y):
+        out = task.predict(cp, sp, x)
+        return task.loss(out, y), task.metrics(out, y)
+
+    losses, mets = jax.vmap(one)(cps, xs, ys)
+    agg = {k: float(jnp.mean(v)) for k, v in mets.items()}
+    return float(jnp.mean(losses)), agg
+
+
+class Engine:
+    """Compile once, drive the whole experiment."""
+
+    def __init__(self, cfg: ExperimentConfig, *,
+                 task: Optional[SplitTask] = None,
+                 fed: Optional[FederatedDataset] = None,
+                 metric_key: Optional[str] = None,
+                 callbacks: Sequence = (),
+                 donate: Optional[bool] = None,
+                 log=print):
+        cfg.validate()
+        if (task is None) != (fed is None):
+            raise ValueError("pass BOTH task and fed (they come from one "
+                             "generator) or neither")
+        if task is None:
+            task, fed, mk = build_task(cfg.task, cfg.n_clients, cfg.alpha,
+                                       cfg.seed, cfg.width, cfg.cut)
+            metric_key = metric_key or mk
+        self.cfg = cfg
+        self.task = task
+        self.fed = fed
+        self.metric_key = metric_key or "accuracy"
+        self.callbacks = tuple(callbacks)
+        self.log = log
+        if donate is None:
+            # buffer donation is a no-op XLA warning on CPU; enable elsewhere
+            donate = jax.default_backend() != "cpu"
+        self.algo: SLAlgorithm = build_algorithm(
+            get_program(cfg.algo), task,
+            adam(cfg.lr_server), adam(cfg.lr_client), cfg.cycle,
+            donate=donate)
+
+    # ------------------------------------------------------------ state
+    def init_state(self) -> TrainState:
+        return self.algo.init(jax.random.PRNGKey(self.cfg.seed),
+                              self.fed.n_clients)
+
+    def round_key(self, rnd: int):
+        return jax.random.PRNGKey(self.cfg.seed * self.cfg.round_key_salt
+                                  + rnd)
+
+    def sample_round(self, rng: np.random.Generator):
+        """Cohort ids + aligned per-client (x, y) batches for one round."""
+        cfg = self.cfg
+        cohort = sample_cohort(self.fed.n_clients, cfg.attendance, rng,
+                               min_cohort=cfg.min_cohort)
+        pairs = [self.fed.clients[c].sample_batch(rng, cfg.batch)
+                 for c in cohort]
+        xs = jnp.asarray(np.stack([p[0] for p in pairs]))
+        ys = jnp.asarray(np.stack([p[1] for p in pairs]))
+        return cohort, xs, ys
+
+    def _emit(self, hook: str, *args):
+        for cb in self.callbacks:
+            fn = getattr(cb, hook, None)
+            if fn is not None:
+                fn(self, *args)
+
+    # -------------------------------------------------------------- run
+    def run(self, state: Optional[TrainState] = None) -> dict:
+        cfg = self.cfg
+        state = self.init_state() if state is None else state
+        rng = np.random.default_rng(cfg.seed + 1)
+        tracker = GradStabilityTracker()
+        history = []
+        round_time = 0.0
+        t0 = time.time()
+        for rnd in range(cfg.rounds):
+            cohort, xs, ys = self.sample_round(rng)
+            t_round = time.time()
+            state, metrics = self.algo.round(state, jnp.asarray(cohort),
+                                             xs, ys, self.round_key(rnd))
+            if cfg.collect_timing:
+                jax.block_until_ready(metrics["server_loss"])
+                if rnd > 0:                       # skip the compile round
+                    round_time += time.time() - t_round
+            tracker.update(metrics)
+            self._emit("on_round", rnd, state, metrics)
+            if (rnd + 1) % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
+                loss, mets = evaluate(self.task, state, self.fed)
+                history.append({"round": rnd + 1, "test_loss": loss, **mets,
+                                "train_loss": float(metrics["server_loss"]),
+                                "elapsed_s": round(time.time() - t0, 1)})
+                self.log(f"[{self.algo.name}] round {rnd+1:4d} "
+                         f"test_loss={loss:.4f} "
+                         f"{self.metric_key}="
+                         f"{mets.get(self.metric_key, float('nan')):.4f}")
+                if cfg.ckpt_dir:
+                    save_checkpoint(cfg.ckpt_dir, rnd + 1, state,
+                                    metadata={"algo": self.algo.name})
+                self._emit("on_eval", rnd, loss, mets)
+        result = {"algo": self.algo.name, "task": cfg.task,
+                  "history": history, "grad_stability": tracker.summary()}
+        if cfg.collect_timing:
+            result["round_time_s"] = round_time / max(1, cfg.rounds - 1)
+        return result

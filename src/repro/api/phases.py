@@ -1,0 +1,387 @@
+"""Declarative round programs: every SL algorithm as a composition of
+typed phases over one :class:`TrainState` pytree.
+
+The paper's claim that CycleSL "can be seamlessly integrated with
+existing methods" (§3) is made literal here: an algorithm is a
+:class:`RoundProgram` — an ordered tuple of phases drawn from
+
+    ExtractFeatures -> ServerUpdate -> FeatureGradients -> ClientUpdate
+    -> Commit
+
+so ``cyclepsl``/``cyclesfl``/``cyclesglr`` are exactly ``psl``/``sflv1``/
+``sglr`` with ``ServerUpdate(mode=...)`` swapped to the CycleSL inner
+loop and ``FeatureGradients`` pointed at the *updated* server (the
+cyclical/BCD part, Eq. 5).  The inherently sequential algorithms
+(``ssl``, ``sflv2``, ``fedavg``) keep their chained semantics as single
+fused phases behind the same interface.
+
+All phases transform a :class:`RoundVars` scratch record inside ONE jit
+trace; :func:`build_algorithm` compiles a program into the
+``(init, round)`` pair the drivers and the legacy
+``repro.core.algorithms.make_algorithm`` shim consume.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cyclesl import (CycleConfig, client_update_one,
+                                client_updates, feature_gradients,
+                                server_inner_loop)
+from repro.core.feature_store import FeatureStore
+from repro.core.protocol import (EntityState, broadcast_entity, entity_mean,
+                                 entity_step, init_entity, put_entities,
+                                 take_entities)
+from repro.core.split import SplitTask
+from repro.optim import Optimizer
+
+
+class TrainState(NamedTuple):
+    """The single pytree every phase transforms (and checkpoints save).
+
+    ``clients`` is the stacked [N, ...] persistent per-client store
+    (PSL-family); ``client_global`` the one shared θ_C (SFL-family).
+    Exactly one of the two is populated.
+    """
+    server: EntityState
+    clients: Optional[EntityState]
+    client_global: Optional[EntityState]
+
+
+@dataclass(frozen=True)
+class SLAlgorithm:
+    """Compiled algorithm: what the drivers actually call."""
+    name: str
+    init: Callable[..., TrainState]
+    round: Callable[..., tuple[TrainState, dict]]
+    uses_global_client: bool
+
+
+@dataclass(frozen=True)
+class PhaseContext:
+    """Static (trace-time) inputs shared by every phase of a round."""
+    task: SplitTask
+    opt_server: Optimizer
+    opt_client: Optimizer
+    cycle: CycleConfig
+
+
+@dataclass
+class RoundVars:
+    """Mutable scratch flowing phase-to-phase inside one jit trace."""
+    state: TrainState
+    cohort: Any                       # [C] int client ids
+    xs: Any                           # [C, b, ...] inputs
+    ys: Any                           # [C, b, ...] labels
+    key: Any
+    cohort_clients: Optional[EntityState] = None
+    server_prev: Any = None           # θ_S^t params, pre-ServerUpdate
+    feats: Any = None                 # [C, b, ...] smashed data
+    fgrads: Any = None                # [C, b, ...] feature gradients
+    metrics: dict = field(default_factory=dict)
+
+
+class Phase:
+    """A typed round phase: ``(PhaseContext, RoundVars) -> None``."""
+
+    def __call__(self, ctx: PhaseContext, v: RoundVars) -> None:
+        raise NotImplementedError
+
+
+def feat_grad_metrics(fgrads) -> dict:
+    fg = fgrads.reshape(fgrads.shape[0], -1).astype(jnp.float32)
+    norms = jnp.linalg.norm(fg, axis=-1) / jnp.sqrt(fg.shape[-1])
+    return {"feat_grad_norm_mean": jnp.mean(norms),
+            "feat_grad_norm_std": jnp.std(norms)}
+
+
+# ----------------------------------------------------------------- phases
+@dataclass(frozen=True)
+class ExtractFeatures(Phase):
+    """Phase 1: select the cohort's client models and extract smashed
+    data in parallel.  Also snapshots θ_S^t so later phases can choose
+    the pre-update server (non-cycle algorithms)."""
+
+    def __call__(self, ctx, v):
+        state = v.state
+        v.cohort_clients = (
+            broadcast_entity(state.client_global, v.ys.shape[0])
+            if state.clients is None
+            else take_entities(state.clients, v.cohort))
+        v.server_prev = state.server.params
+        v.feats = jax.vmap(ctx.task.client_forward)(v.cohort_clients.params,
+                                                    v.xs)
+
+
+def _pair_server_losses_and_grads(ctx, v):
+    """Per-pair server loss/grad at θ_S^t over the cohort's features."""
+    sp = v.state.server.params
+
+    def one(f, y):
+        return jax.value_and_grad(ctx.task.server_loss)(sp, f, y)
+
+    return jax.vmap(one)(v.feats, v.ys)
+
+
+@dataclass(frozen=True)
+class ServerUpdate(Phase):
+    """Phase 2, the axis the zoo varies along:
+
+    ``cycle``        pool features into D_S^f and run the CycleSL inner
+                     loop (E epochs of resampled minibatches, Eq. 3) —
+                     the paper's standalone higher-level server task.
+    ``replica_avg``  PSL/SFL-V1: per-pair server replica steps, then
+                     replica (model) averaging.
+    ``mean_grad``    SGLR: one server stepped with the cohort-mean
+                     gradient (no model duplication).
+    """
+    mode: str = "cycle"
+
+    def __call__(self, ctx, v):
+        if self.mode == "cycle":
+            store = FeatureStore.pool(jax.lax.stop_gradient(v.feats), v.ys)
+            server, sloss = server_inner_loop(
+                ctx.task, v.state.server, ctx.opt_server, store, v.key,
+                ctx.cycle, batch=jax.tree.leaves(v.ys)[0].shape[1])
+            v.metrics["server_loss"] = sloss
+        elif self.mode == "replica_avg":
+            losses, gs = _pair_server_losses_and_grads(ctx, v)
+            rep = broadcast_entity(v.state.server, v.ys.shape[0])
+            rep = jax.vmap(lambda e, g: entity_step(e, g, ctx.opt_server))(
+                rep, gs)
+            server = entity_mean(rep)
+            v.metrics["server_loss"] = jnp.mean(losses)
+        elif self.mode == "mean_grad":
+            losses, gs = _pair_server_losses_and_grads(ctx, v)
+            server = entity_step(
+                v.state.server,
+                jax.tree.map(lambda g: jnp.mean(g, axis=0), gs),
+                ctx.opt_server)
+            v.metrics["server_loss"] = jnp.mean(losses)
+        else:
+            raise ValueError(f"unknown ServerUpdate mode {self.mode!r}")
+        v.state = v.state._replace(server=server)
+
+
+@dataclass(frozen=True)
+class FeatureGradients(Phase):
+    """Phase 3: B_i^g = ∇_{B_i^f} L(θ_S(B_i^f)) with θ_S frozen.
+
+    ``use_updated=True`` reads θ_S^{t+1} (the cyclical part, Eq. 5);
+    ``False`` reads the θ_S^t snapshot (classic SL back-prop order).
+    ``average`` forces SGLR-style cohort-mean gradients on (True) or
+    off (False); ``None`` defers to ``CycleConfig.avg_client_grads``.
+    """
+    use_updated: bool = True
+    average: Optional[bool] = None
+
+    def __call__(self, ctx, v):
+        params = (v.state.server.params if self.use_updated
+                  else v.server_prev)
+        avg = (ctx.cycle.avg_client_grads if self.average is None
+               else self.average)
+        ccfg = (ctx.cycle if avg == ctx.cycle.avg_client_grads
+                else replace(ctx.cycle, avg_client_grads=avg))
+        v.fgrads = feature_gradients(ctx.task, params, v.feats, v.ys, ccfg)
+        v.metrics.update(feat_grad_metrics(v.fgrads))
+
+
+@dataclass(frozen=True)
+class ClientUpdate(Phase):
+    """Phase 4: pull feature gradients through each client's local VJP.
+
+    ``chained=True`` runs the sequential-SL variant: ONE client model
+    scanned along the cohort (each update sees the previous one), used
+    by ``cyclessl``.  Both paths share ``client_update_one`` and respect
+    ``CycleConfig.grad_clip``.
+    """
+    record_gnorm: bool = False
+    chained: bool = False
+
+    def __call__(self, ctx, v):
+        clip = ctx.cycle.grad_clip
+        if self.chained:
+            def body(entity, inp):
+                x, g = inp
+                return client_update_one(ctx.task, entity, x, g,
+                                         ctx.opt_client, clip)
+            v.cohort_clients, gnorms = jax.lax.scan(
+                body, v.state.client_global, (v.xs, v.fgrads))
+        else:
+            v.cohort_clients, gnorms = client_updates(
+                ctx.task, v.cohort_clients, ctx.opt_client, v.xs, v.fgrads,
+                grad_clip=clip)
+        if self.record_gnorm:
+            v.metrics["client_grad_norm_mean"] = jnp.mean(gnorms)
+
+
+@dataclass(frozen=True)
+class Commit(Phase):
+    """Phase 5: write the updated cohort back into the train state.
+
+    ``per_client``  scatter into the persistent [N, ...] client store
+                    (PSL-family: clients are never aggregated).
+    ``average``     FedAvg the cohort into the shared θ_C (SFL-family).
+    ``global``      replace the shared θ_C wholesale (sequential chain).
+    """
+    mode: str = "per_client"
+
+    def __call__(self, ctx, v):
+        state, cc = v.state, v.cohort_clients
+        if self.mode == "per_client":
+            v.state = state._replace(
+                clients=put_entities(state.clients, v.cohort, cc))
+        elif self.mode == "average":
+            v.state = state._replace(client_global=entity_mean(cc))
+        elif self.mode == "global":
+            v.state = state._replace(client_global=cc)
+        else:
+            raise ValueError(f"unknown Commit mode {self.mode!r}")
+
+
+# ----------------------------------------------- fused sequential rounds
+# ssl / sflv2 / fedavg interleave client and server updates inside one
+# scan, so they cannot be expressed as the 5-phase pipeline without
+# changing semantics; they ride as single fused phases instead.
+@dataclass(frozen=True)
+class SequentialChainRound(Phase):
+    """ssl: one shared client model passed client-to-client, end-to-end
+    update per client (the O(N)-latency canon)."""
+
+    def __call__(self, ctx, v):
+        task, opt_s, opt_c = ctx.task, ctx.opt_server, ctx.opt_client
+
+        def body(carry, inp):
+            server, client = carry
+            x, y = inp
+
+            def loss_fn(c, s):
+                return task.e2e_loss(c, s, x, y)
+            loss, (gc, gs) = jax.value_and_grad(loss_fn, (0, 1))(
+                client.params, server.params)
+            f = task.client_forward(client.params, x)
+            fg = jax.grad(lambda ff: task.server_loss(
+                jax.lax.stop_gradient(server.params), ff, y))(f)
+            return ((entity_step(server, gs, opt_s),
+                     entity_step(client, gc, opt_c)), (loss, fg))
+
+        (server, client), (losses, fg) = jax.lax.scan(
+            body, (v.state.server, v.state.client_global), (v.xs, v.ys))
+        v.metrics.update(server_loss=jnp.mean(losses),
+                         **feat_grad_metrics(fg))
+        v.state = v.state._replace(server=server, client_global=client)
+
+
+@dataclass(frozen=True)
+class ServerSequentialRound(Phase):
+    """sflv2: single server model, clients processed sequentially on the
+    server side; client models FedAvg'd at round end."""
+
+    def __call__(self, ctx, v):
+        task, opt_s, opt_c = ctx.task, ctx.opt_server, ctx.opt_client
+        cohort_clients = broadcast_entity(v.state.client_global,
+                                          v.ys.shape[0])
+
+        def body(server, inp):
+            cp, x, y = inp
+
+            def loss_fn(c, s):
+                return task.e2e_loss(c, s, x, y)
+            loss, (gc, gs) = jax.value_and_grad(loss_fn, (0, 1))(
+                cp, server.params)
+            f = task.client_forward(cp, x)
+            fg = jax.grad(lambda ff: task.server_loss(
+                jax.lax.stop_gradient(server.params), ff, y))(f)
+            return entity_step(server, gs, opt_s), (loss, gc, fg)
+
+        server, (losses, gc, fg) = jax.lax.scan(
+            body, v.state.server, (cohort_clients.params, v.xs, v.ys))
+        cohort_clients = jax.vmap(
+            lambda e, g: entity_step(e, g, ctx.opt_client))(cohort_clients, gc)
+        v.metrics.update(server_loss=jnp.mean(losses),
+                         **feat_grad_metrics(fg))
+        v.state = v.state._replace(server=server,
+                                   client_global=entity_mean(cohort_clients))
+
+
+@dataclass(frozen=True)
+class LocalFedAvgRound(Phase):
+    """fedavg: clients train the FULL composed model locally; both halves
+    are averaged (no split traffic — the non-SL yardstick)."""
+
+    def __call__(self, ctx, v):
+        task, opt_s, opt_c = ctx.task, ctx.opt_server, ctx.opt_client
+        n = v.ys.shape[0]
+        servers = broadcast_entity(v.state.server, n)
+        clients = broadcast_entity(v.state.client_global, n)
+
+        def one(se, ce, x, y):
+            def loss_fn(c, s):
+                return task.e2e_loss(c, s, x, y)
+            loss, (gc, gs) = jax.value_and_grad(loss_fn, (0, 1))(
+                ce.params, se.params)
+            return (entity_step(se, gs, opt_s),
+                    entity_step(ce, gc, opt_c), loss)
+
+        servers, clients, losses = jax.vmap(one)(servers, clients, v.xs, v.ys)
+        v.metrics.update(server_loss=jnp.mean(losses),
+                         feat_grad_norm_mean=jnp.zeros(()),
+                         feat_grad_norm_std=jnp.zeros(()))
+        v.state = v.state._replace(server=entity_mean(servers),
+                                   client_global=entity_mean(clients))
+
+
+# ---------------------------------------------------------------- program
+@dataclass(frozen=True)
+class RoundProgram:
+    """A named, declarative composition of phases = one SL algorithm."""
+    name: str
+    phases: tuple[Phase, ...]
+    uses_global_client: bool
+
+    def describe(self) -> str:
+        return " -> ".join(type(p).__name__ for p in self.phases)
+
+
+def init_train_state(key, n_clients: int, task: SplitTask,
+                     opt_server: Optimizer, opt_client: Optimizer,
+                     global_client: bool) -> TrainState:
+    ks, kc = jax.random.split(key)
+    server = init_entity(task.init_server(ks), opt_server)
+    client0 = init_entity(task.init_client(kc), opt_client)
+    if global_client:
+        return TrainState(server, None, client0)
+    # per-client persistent models — identical init (the paper initializes
+    # every client the same way; heterogeneity comes from the data)
+    return TrainState(server, broadcast_entity(client0, n_clients), None)
+
+
+def build_algorithm(program: RoundProgram, task: SplitTask,
+                    opt_server: Optimizer, opt_client: Optimizer,
+                    cycle: CycleConfig = CycleConfig(),
+                    donate: bool = False) -> SLAlgorithm:
+    """Compile a RoundProgram into the uniform algorithm interface.
+
+    ``donate=True`` donates the TrainState buffers to the jitted round
+    (in-place on accelerators; skipped by the Engine on CPU where XLA
+    cannot honor donation).
+    """
+    ctx = PhaseContext(task, opt_server, opt_client, cycle)
+
+    def init(key, n_clients: int) -> TrainState:
+        return init_train_state(key, n_clients, task, opt_server, opt_client,
+                                program.uses_global_client)
+
+    def round_impl(state, cohort, xs, ys, key):
+        v = RoundVars(state=state, cohort=cohort, xs=xs, ys=ys, key=key)
+        for phase in program.phases:
+            phase(ctx, v)
+        return v.state, v.metrics
+
+    round_fn = (jax.jit(round_impl, donate_argnums=(0,)) if donate
+                else jax.jit(round_impl))
+    return SLAlgorithm(program.name, init, round_fn,
+                       program.uses_global_client)

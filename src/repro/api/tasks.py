@@ -1,0 +1,81 @@
+"""Task registry: name -> (SplitTask, FederatedDataset, metric key).
+
+The synthetic stand-ins for the paper's four workloads (§4.1), moved out
+of ``launch/train.py`` so every driver (Engine, benchmarks, examples)
+builds tasks through one table.  New workloads register with
+``register_task`` and are immediately reachable from ``ExperimentConfig``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from repro.core.split import SplitTask, make_stage_task
+from repro.data.federated import FederatedDataset
+from repro.data.synthetic import (SyntheticCharLMTask, SyntheticImageTask,
+                                  SyntheticRegressionTask)
+from repro.models.cnn import femnist_cnn, mlp, resnet9
+from repro.models.lstm import shakespeare_lstm
+
+TaskBuilder = Callable[..., tuple[SplitTask, FederatedDataset, str]]
+TASKS: dict[str, TaskBuilder] = {}
+
+
+def register_task(name: str):
+    def deco(fn: TaskBuilder) -> TaskBuilder:
+        TASKS[name] = fn
+        return fn
+    return deco
+
+
+@register_task("image")
+def _image(n_clients, alpha, seed, width, cut):
+    gen = SyntheticImageTask(n_clients=n_clients, alpha=alpha, seed=seed)
+    x, y, _, idx = gen.build()
+    model = femnist_cnn(n_classes=gen.n_classes, width=width)
+    task = make_stage_task(model, cut=cut, kind="xent")
+    x = x.reshape(len(x), gen.img, gen.img, gen.channels)
+    # femnist cnn expects 28x28x1; adapt by padding channels->1 proj
+    x = x.mean(axis=-1, keepdims=True)
+    x = np.pad(x, ((0, 0), (6, 6), (6, 6), (0, 0)))
+    return task, FederatedDataset.from_arrays(x, y, idx, seed=seed), "accuracy"
+
+
+@register_task("cifar")
+def _cifar(n_clients, alpha, seed, width, cut):
+    gen = SyntheticImageTask(n_clients=n_clients, alpha=alpha, seed=seed,
+                             img=32, n_classes=20, samples_per_client=96)
+    x, y, _, idx = gen.build()
+    model = resnet9(n_classes=20, width=width)
+    task = make_stage_task(model, cut=cut, kind="xent")
+    return task, FederatedDataset.from_arrays(x, y, idx, seed=seed), "accuracy"
+
+
+@register_task("charlm")
+def _charlm(n_clients, alpha, seed, width, cut):
+    gen = SyntheticCharLMTask(n_clients=n_clients, seed=seed)
+    x, y, _, idx = gen.build()
+    model = shakespeare_lstm(vocab=gen.vocab)
+    task = make_stage_task(model, cut=2, kind="xent")
+    return task, FederatedDataset.from_arrays(x, y, idx, seed=seed), "accuracy"
+
+
+@register_task("gaze")
+def _gaze(n_clients, alpha, seed, width, cut):
+    gen = SyntheticRegressionTask(n_clients=n_clients, seed=seed)
+    x, y, _, idx = gen.build()
+    model = mlp(gen.d_in, [128, 64], gen.d_out)
+    task = make_stage_task(model, cut=1, kind="mse")
+    return task, FederatedDataset.from_arrays(x, y, idx, seed=seed), "angular_deg"
+
+
+def build_task(name: str, n_clients: int, alpha: float, seed: int,
+               width: int, cut: int):
+    if name not in TASKS:
+        raise KeyError(f"unknown task {name!r}: {sorted(TASKS)}")
+    return TASKS[name](n_clients, alpha, seed, width, cut)
+
+
+def task_names() -> tuple[str, ...]:
+    return tuple(sorted(TASKS))

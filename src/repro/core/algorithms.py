@@ -1,4 +1,4 @@
-"""The SL algorithm zoo the paper benchmarks (§4) + the Cycle variants.
+"""The SL algorithm zoo — now a thin compatibility shim over ``repro.api``.
 
 All algorithms share one interface so the benchmark harness treats them
 uniformly:
@@ -7,286 +7,58 @@ uniformly:
     state = algo.init(key, n_clients)
     state, metrics = algo.round(state, cohort_idx, xs, ys, key)
 
-Semantics (paper §2.1 / §4):
+The round implementations themselves live in :mod:`repro.api.phases` as
+declarative :class:`~repro.api.phases.RoundProgram` compositions — see
+:mod:`repro.api.registry` for the name -> program table and the
+semantics of each variant (paper §2.1 / §4):
 
-  ssl       sequential SL: one shared client model passed client-to-client,
-            end-to-end update per client (the O(N)-latency canon).
-  psl       parallel SL: per-pair end-to-end steps against server model
-            replicas, server replicas averaged; clients NEVER aggregated.
-  sflv1     PSL + FedAvg of client models (SplitFed V1).
-  sflv2     single server model, clients processed sequentially on the
-            server side; client models aggregated (SplitFed V2).
-  sglr      single server updated with the cohort-mean gradient; the
-            returned feature gradients are averaged over the cohort
-            (server-side local gradient averaging) — no model aggregation.
-  fedavg    clients train the FULL composed model locally; average.
-  cyclepsl  CycleSL plugged into PSL    (== paper Algorithm 1).
-  cyclesfl  CycleSL plugged into SFL    (client models aggregated at round end).
-  cyclesglr CycleSL plugged into SGLR   (averaged feature grads).
-  cyclessl  CycleSL on sequential SL    (appendix-only in the paper).
+  ssl       sequential SL (O(N)-latency canon)
+  psl       parallel SL, server replicas averaged, clients never aggregated
+  sflv1     PSL + FedAvg of client models (SplitFed V1)
+  sflv2     single server, clients processed sequentially server-side
+  sglr      server-side local gradient averaging (no model aggregation)
+  fedavg    full-model local training + averaging (non-SL yardstick)
+  cyclepsl  CycleSL plugged into PSL    (== paper Algorithm 1)
+  cyclesfl  CycleSL plugged into SFL
+  cyclesglr CycleSL plugged into SGLR
+  cyclessl  CycleSL on sequential SL    (appendix-only in the paper)
 
 PSL-family keeps a *persistent per-client* model store (cold-start /
 lag effects included, as in the paper); SFL-family keeps one global
 client model all cohort members start from.
+
+Deprecated: new code should resolve programs through
+``repro.api.get_program`` + ``build_algorithm``, or drive whole
+experiments with ``repro.api.Engine``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.cyclesl import (CycleConfig, client_updates, cyclesl_round,
-                                feature_gradients)
-from repro.core.protocol import (EntityState, broadcast_entity, entity_mean,
-                                 entity_step, init_entity, put_entities,
-                                 take_entities)
+from repro.api.phases import (RoundProgram, SLAlgorithm,  # noqa: F401
+                              TrainState, build_algorithm)
+from repro.api.registry import PROGRAMS, get_program
+from repro.core.cyclesl import CycleConfig
 from repro.core.split import SplitTask
-from repro.optim import Optimizer, adam
+from repro.optim import Optimizer
 
-
-class AlgoState(NamedTuple):
-    server: EntityState
-    clients: Optional[EntityState]        # stacked [N, ...] (PSL-family)
-    client_global: Optional[EntityState]  # shared θ_C (SFL-family / fedavg)
-
-
-@dataclass(frozen=True)
-class SLAlgorithm:
-    name: str
-    init: Callable[..., AlgoState]
-    round: Callable[..., tuple[AlgoState, dict]]
-    uses_global_client: bool
-
-
-def _feat_metrics(fgrads):
-    fg = fgrads.reshape(fgrads.shape[0], -1).astype(jnp.float32)
-    norms = jnp.linalg.norm(fg, axis=-1) / jnp.sqrt(fg.shape[-1])
-    return {"feat_grad_norm_mean": jnp.mean(norms),
-            "feat_grad_norm_std": jnp.std(norms)}
+# Backwards-compatible aliases: AlgoState is the same pytree the phases
+# operate on, and ALGORITHMS resolves through the one program registry.
+AlgoState = TrainState
+ALGORITHMS: dict[str, RoundProgram] = PROGRAMS
 
 
 def make_algorithm(name: str, task: SplitTask, opt_server: Optimizer,
                    opt_client: Optimizer,
                    cycle: CycleConfig = CycleConfig()) -> SLAlgorithm:
-    name = name.lower()
-    if name not in ALGORITHMS:
-        raise KeyError(f"unknown algorithm {name!r}: {sorted(ALGORITHMS)}")
-    if name == "cyclesglr":
-        from dataclasses import replace
-        cycle = replace(cycle, avg_client_grads=True)
-    return ALGORITHMS[name](name, task, opt_server, opt_client, cycle)
+    """Deprecated shim: compile a registered RoundProgram.
 
-
-# ------------------------------------------------------------------ init
-def _init_state(key, n_clients: int, task: SplitTask, opt_s, opt_c,
-                global_client: bool) -> AlgoState:
-    ks, kc = jax.random.split(key)
-    server = init_entity(task.init_server(ks), opt_s)
-    client0 = init_entity(task.init_client(kc), opt_c)
-    if global_client:
-        return AlgoState(server, None, client0)
-    # per-client persistent models — identical init (the paper initializes
-    # every client the same way; heterogeneity comes from the data)
-    n = n_clients
-    return AlgoState(server, broadcast_entity(client0, n), None)
-
-
-# --------------------------------------------------------------- helpers
-def _pair_losses_and_grads(task, server_params, client_params, xs, ys):
-    """vmap end-to-end loss/grads over cohort pairs."""
-    def one(cp, x, y):
-        def loss_fn(c, s):
-            return task.e2e_loss(c, s, x, y)
-        loss, (gc, gs) = jax.value_and_grad(loss_fn, (0, 1))(cp, server_params)
-        # the gradient actually *sent back* over the wire is dL/d features
-        f = task.client_forward(cp, x)
-        fg = jax.grad(lambda ff: task.server_loss(
-            jax.lax.stop_gradient(server_params), ff, y))(f)
-        return loss, gc, gs, fg
-    return jax.vmap(one)(client_params, xs, ys)
-
-
-# ------------------------------------------------------------------- PSL
-def _psl_round(task, opt_s, opt_c, cycle, state: AlgoState, cohort,
-               xs, ys, key, aggregate_clients: bool):
-    cohort_clients = (broadcast_entity(state.client_global, xs.shape[0])
-                      if state.clients is None
-                      else take_entities(state.clients, cohort))
-    losses, gc, gs, fg = _pair_losses_and_grads(
-        task, state.server.params, cohort_clients.params, xs, ys)
-    # per-pair server replica step, then replica averaging (model agg.)
-    rep = broadcast_entity(state.server, xs.shape[0])
-    rep = jax.vmap(lambda e, g: entity_step(e, g, opt_s))(rep, gs)
-    server = entity_mean(rep)
-    # client local steps
-    cohort_clients = jax.vmap(lambda e, g: entity_step(e, g, opt_c))(
-        cohort_clients, gc)
-    metrics = {"server_loss": jnp.mean(losses), **_feat_metrics(fg)}
-    state = _commit_clients(state, cohort, cohort_clients, aggregate_clients)
-    return AlgoState(server, state.clients, state.client_global), metrics
-
-
-def _commit_clients(state: AlgoState, cohort, cohort_clients,
-                    aggregate: bool) -> AlgoState:
-    if aggregate:
-        return AlgoState(state.server, state.clients,
-                         entity_mean(cohort_clients))
-    return AlgoState(state.server,
-                     put_entities(state.clients, cohort, cohort_clients),
-                     state.client_global)
-
-
-# ------------------------------------------------------------------ SGLR
-def _sglr_round(task, opt_s, opt_c, cycle, state: AlgoState, cohort,
-                xs, ys, key):
-    cohort_clients = take_entities(state.clients, cohort)
-    losses, gc, gs, fg = _pair_losses_and_grads(
-        task, state.server.params, cohort_clients.params, xs, ys)
-    # single server model, cohort-mean gradient (no duplication)
-    server = entity_step(state.server, jax.tree.map(
-        lambda g: jnp.mean(g, axis=0), gs), opt_s)
-    # server-side local gradient averaging: every client receives the
-    # cohort-mean feature gradient, pulled through its own VJP
-    fg_mean = jnp.broadcast_to(jnp.mean(fg, axis=0, keepdims=True), fg.shape)
-    cohort_clients, _ = client_updates(task, cohort_clients, opt_c, xs, fg_mean)
-    metrics = {"server_loss": jnp.mean(losses), **_feat_metrics(fg_mean)}
-    state = _commit_clients(state, cohort, cohort_clients, aggregate=False)
-    return AlgoState(server, state.clients, state.client_global), metrics
-
-
-# ----------------------------------------------------------------- SFLV2
-def _sflv2_round(task, opt_s, opt_c, cycle, state: AlgoState, cohort,
-                 xs, ys, key):
-    cohort_clients = broadcast_entity(state.client_global, xs.shape[0])
-
-    def body(server, inp):
-        cp, x, y = inp
-        def loss_fn(c, s):
-            return task.e2e_loss(c, s, x, y)
-        loss, (gc, gs) = jax.value_and_grad(loss_fn, (0, 1))(cp, server.params)
-        f = task.client_forward(cp, x)
-        fg = jax.grad(lambda ff: task.server_loss(
-            jax.lax.stop_gradient(server.params), ff, y))(f)
-        return entity_step(server, gs, opt_s), (loss, gc, fg)
-
-    server, (losses, gc, fg) = jax.lax.scan(
-        body, state.server, (cohort_clients.params, xs, ys))
-    cohort_clients = jax.vmap(lambda e, g: entity_step(e, g, opt_c))(
-        cohort_clients, gc)
-    metrics = {"server_loss": jnp.mean(losses), **_feat_metrics(fg)}
-    return AlgoState(server, state.clients, entity_mean(cohort_clients)), metrics
-
-
-# ------------------------------------------------------------------- SSL
-def _ssl_round(task, opt_s, opt_c, cycle, state: AlgoState, cohort,
-               xs, ys, key):
-    """Sequential SL: client model passed along the cohort chain."""
-
-    def body(carry, inp):
-        server, client = carry
-        x, y = inp
-        def loss_fn(c, s):
-            return task.e2e_loss(c, s, x, y)
-        loss, (gc, gs) = jax.value_and_grad(loss_fn, (0, 1))(
-            client.params, server.params)
-        f = task.client_forward(client.params, x)
-        fg = jax.grad(lambda ff: task.server_loss(
-            jax.lax.stop_gradient(server.params), ff, y))(f)
-        return ((entity_step(server, gs, opt_s),
-                 entity_step(client, gc, opt_c)), (loss, fg))
-
-    (server, client), (losses, fg) = jax.lax.scan(
-        body, (state.server, state.client_global), (xs, ys))
-    metrics = {"server_loss": jnp.mean(losses), **_feat_metrics(fg)}
-    return AlgoState(server, state.clients, client), metrics
-
-
-# ---------------------------------------------------------------- FedAvg
-def _fedavg_round(task, opt_s, opt_c, cycle, state: AlgoState, cohort,
-                  xs, ys, key):
-    """Clients train the full composed model locally; average both parts."""
-    n = xs.shape[0]
-    servers = broadcast_entity(state.server, n)
-    clients = broadcast_entity(state.client_global, n)
-
-    def one(se, ce, x, y):
-        def loss_fn(c, s):
-            return task.e2e_loss(c, s, x, y)
-        loss, (gc, gs) = jax.value_and_grad(loss_fn, (0, 1))(ce.params, se.params)
-        return entity_step(se, gs, opt_s), entity_step(ce, gc, opt_c), loss
-
-    servers, clients, losses = jax.vmap(one)(servers, clients, xs, ys)
-    return (AlgoState(entity_mean(servers), state.clients, entity_mean(clients)),
-            {"server_loss": jnp.mean(losses),
-             "feat_grad_norm_mean": jnp.zeros(()),
-             "feat_grad_norm_std": jnp.zeros(())})
-
-
-# --------------------------------------------------------- Cycle variants
-def _cycle_round(task, opt_s, opt_c, cycle: CycleConfig, state: AlgoState,
-                 cohort, xs, ys, key, aggregate_clients: bool):
-    cohort_clients = (broadcast_entity(state.client_global, ys.shape[0])
-                      if state.clients is None
-                      else take_entities(state.clients, cohort))
-    server, cohort_clients, metrics = cyclesl_round(
-        task, state.server, cohort_clients, opt_s, opt_c, xs, ys, key, cycle)
-    state = AlgoState(server, state.clients, state.client_global)
-    state = _commit_clients(state, cohort, cohort_clients, aggregate_clients)
-    return state, metrics
-
-
-def _cyclessl_round(task, opt_s, opt_c, cycle, state, cohort, xs, ys, key):
-    """CycleSL on the sequential chain: one client model, features from the
-    chain, then the standard CycleSL server phase + one chained update."""
-    # extract features sequentially with the single client model
-    feats = jax.vmap(lambda x: task.client_forward(state.client_global.params, x))(xs)
-    from repro.core.feature_store import FeatureStore
-    from repro.core.cyclesl import server_inner_loop
-    store = FeatureStore.pool(jax.lax.stop_gradient(feats), ys)
-    server, sloss = server_inner_loop(task, state.server, opt_s, store, key,
-                                      cycle, batch=ys.shape[1])
-    fgrads = feature_gradients(task, server.params, feats, ys, cycle)
-
-    def body(client, inp):
-        x, g = inp
-        def fwd(p):
-            return task.client_forward(p, x)
-        out, vjp = jax.vjp(fwd, client.params)
-        (grads,) = vjp(g.astype(out.dtype))
-        return entity_step(client, grads, opt_c), None
-
-    client, _ = jax.lax.scan(body, state.client_global, (xs, fgrads))
-    metrics = {"server_loss": sloss, **_feat_metrics(fgrads),
-               "client_grad_norm_mean": jnp.zeros(())}
-    return AlgoState(server, state.clients, client), metrics
-
-
-# --------------------------------------------------------------- registry
-def _make(round_fn, global_client: bool):
-    def build(name, task, opt_s, opt_c, cycle):
-        def init(key, n_clients: int) -> AlgoState:
-            return _init_state(key, n_clients, task, opt_s, opt_c, global_client)
-
-        @jax.jit
-        def round(state, cohort, xs, ys, key):
-            return round_fn(task, opt_s, opt_c, cycle, state, cohort, xs, ys, key)
-
-        return SLAlgorithm(name, init, round, global_client)
-    return build
-
-
-ALGORITHMS: dict[str, Callable] = {
-    "ssl": _make(_ssl_round, True),
-    "psl": _make(partial(_psl_round, aggregate_clients=False), False),
-    "sflv1": _make(partial(_psl_round, aggregate_clients=True), True),
-    "sflv2": _make(_sflv2_round, True),
-    "sglr": _make(_sglr_round, False),
-    "fedavg": _make(_fedavg_round, True),
-    "cyclepsl": _make(partial(_cycle_round, aggregate_clients=False), False),
-    "cyclesfl": _make(partial(_cycle_round, aggregate_clients=True), True),
-    "cyclesglr": _make(partial(_cycle_round, aggregate_clients=False), False),
-    "cyclessl": _make(_cyclessl_round, True),
-}
+    Use ``repro.api.build_algorithm(repro.api.get_program(name), ...)``
+    (or ``repro.api.Engine`` for full runs) in new code.
+    """
+    warnings.warn(
+        "make_algorithm is deprecated; use repro.api.get_program + "
+        "build_algorithm, or repro.api.Engine",
+        DeprecationWarning, stacklevel=2)
+    return build_algorithm(get_program(name), task, opt_server, opt_client,
+                           cycle)

@@ -28,7 +28,15 @@ import jax.numpy as jnp
 from repro.core.feature_store import FeatureStore, gather_batch, resample_plan
 from repro.core.protocol import EntityState, entity_step
 from repro.core.split import SplitTask
-from repro.optim import Optimizer
+from repro.optim import Optimizer, clip_by_global_norm
+
+
+def _maybe_clip(grads, max_norm: Optional[float]):
+    """Global-norm clipping when ``max_norm`` is set (CycleConfig.grad_clip)."""
+    if max_norm is None:
+        return grads
+    clipped, _ = clip_by_global_norm(grads, max_norm)
+    return clipped
 
 
 @dataclass(frozen=True)
@@ -41,6 +49,8 @@ class CycleConfig:
     # the epoch reading implied by the paper's Table 8 server cost.
     server_steps: Optional[int] = None
     avg_client_grads: bool = False  # CycleSGLR: SGLR-style grad averaging
+    # global-norm clip applied to every server inner-loop step and every
+    # client VJP step (None = no clipping)
     grad_clip: Optional[float] = None
     # optional sharding hook applied to every resampled server batch
     # (features, labels) — the launcher injects a with_sharding_constraint
@@ -64,6 +74,7 @@ def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
         if ccfg.batch_constraint is not None:
             f, y = ccfg.batch_constraint(f, y)
         loss, grads = jax.value_and_grad(task.server_loss)(entity.params, f, y)
+        grads = _maybe_clip(grads, ccfg.grad_clip)
         return entity_step(entity, grads, opt_s), loss
 
     server, losses = jax.lax.scan(one_step, server, plan2)
@@ -85,21 +96,35 @@ def feature_gradients(task: SplitTask, server_params, feats, ys,
     return grads
 
 
+def client_update_one(task: SplitTask, entity: EntityState, x, g,
+                      opt_c: Optimizer,
+                      grad_clip: Optional[float] = None
+                      ) -> tuple[EntityState, jnp.ndarray]:
+    """One client's phase-5 step: pull its feature gradient ``g`` through
+    the local VJP, optionally clip, and take one optimizer step.
+
+    The single source of truth for the client update — the cohort-vmapped
+    :func:`client_updates` and the sequential (cyclessl) chain both call it.
+    Returns the stepped entity and the global norm of the applied grads.
+    """
+    def fwd(p):
+        return task.client_forward(p, x)
+    out, vjp = jax.vjp(fwd, entity.params)
+    (grads,) = vjp(g.astype(out.dtype))
+    grads = _maybe_clip(grads, grad_clip)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                         for l in jax.tree.leaves(grads)))
+    return entity_step(entity, grads, opt_c), gnorm
+
+
 def client_updates(task: SplitTask, clients: EntityState, opt_c: Optimizer,
-                   xs, feat_grads) -> tuple[EntityState, jnp.ndarray]:
+                   xs, feat_grads,
+                   grad_clip: Optional[float] = None
+                   ) -> tuple[EntityState, jnp.ndarray]:
     """Pull B_i^g through each client's VJP and take one optimizer step."""
-
-    def per_client(entity: EntityState, x, g):
-        def fwd(p):
-            return task.client_forward(p, x)
-        out, vjp = jax.vjp(fwd, entity.params)
-        (grads,) = vjp(g.astype(out.dtype))
-        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                             for l in jax.tree.leaves(grads)))
-        return entity_step(entity, grads, opt_c), gnorm
-
     new_clients, gnorms = jax.vmap(
-        lambda e, x, g: per_client(e, x, g))(clients, xs, feat_grads)
+        lambda e, x, g: client_update_one(task, e, x, g, opt_c, grad_clip))(
+            clients, xs, feat_grads)
     return new_clients, gnorms
 
 
@@ -130,7 +155,8 @@ def cyclesl_round(task: SplitTask, server: EntityState,
         fg_flat, axis=-1) / jnp.sqrt(fg_flat.shape[-1])
 
     # 5. client local updates through the VJP
-    clients, client_gnorms = client_updates(task, clients, opt_c, xs, fgrads)
+    clients, client_gnorms = client_updates(task, clients, opt_c, xs, fgrads,
+                                            grad_clip=ccfg.grad_clip)
 
     metrics = {
         "server_loss": server_loss,

@@ -1,9 +1,10 @@
-"""Federated split-learning training driver (runs for real on CPU).
+"""Federated split-learning training CLI (runs for real on CPU).
 
-Trains any StageModel task with any SL algorithm from the zoo on the
-synthetic federated datasets — the end-to-end example driver
-(deliverable (b)): a ~100M-param run is just ``--arch`` + width knobs
-away, the default is CPU-sized so it finishes in minutes.
+Thin flag-parsing front-end over the one driver loop,
+``repro.api.Engine``: build an :class:`~repro.api.ExperimentConfig`
+from flags (or kwargs via :func:`run`) and call ``Engine.run()``.
+A ~100M-param run is just ``--arch`` + width knobs away; the default is
+CPU-sized so it finishes in minutes.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train \
@@ -14,101 +15,13 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import save_checkpoint
-from repro.core.algorithms import ALGORITHMS, make_algorithm
+from repro.api import Engine, ExperimentConfig
+# re-exported for backwards compatibility (tests and notebooks import
+# these from here; they now live in repro.api)
+from repro.api.engine import evaluate            # noqa: F401
+from repro.api.tasks import build_task           # noqa: F401
 from repro.core.cyclesl import CycleConfig
-from repro.core.drift import GradStabilityTracker
-from repro.core.split import make_stage_task
-from repro.data.federated import FederatedDataset, sample_cohort
-from repro.data.synthetic import (SyntheticCharLMTask, SyntheticImageTask,
-                                  SyntheticRegressionTask)
-from repro.models.cnn import femnist_cnn, mlp, resnet9
-from repro.models.lstm import shakespeare_lstm
-from repro.optim import adam
-
-
-def build_task(name: str, n_clients: int, alpha: float, seed: int,
-               width: int, cut: int):
-    if name == "image":
-        gen = SyntheticImageTask(n_clients=n_clients, alpha=alpha, seed=seed)
-        x, y, _, idx = gen.build()
-        model = femnist_cnn(n_classes=gen.n_classes, width=width)
-        task = make_stage_task(model, cut=cut, kind="xent")
-        x = x.reshape(len(x), gen.img, gen.img, gen.channels)
-        # femnist cnn expects 28x28x1; adapt by padding channels->1 proj
-        x = x.mean(axis=-1, keepdims=True)
-        x = np.pad(x, ((0, 0), (6, 6), (6, 6), (0, 0)))
-        return task, FederatedDataset.from_arrays(x, y, idx, seed=seed), "accuracy"
-    if name == "cifar":
-        gen = SyntheticImageTask(n_clients=n_clients, alpha=alpha, seed=seed,
-                                 img=32, n_classes=20, samples_per_client=96)
-        x, y, _, idx = gen.build()
-        model = resnet9(n_classes=20, width=width)
-        task = make_stage_task(model, cut=cut, kind="xent")
-        return task, FederatedDataset.from_arrays(x, y, idx, seed=seed), "accuracy"
-    if name == "charlm":
-        gen = SyntheticCharLMTask(n_clients=n_clients, seed=seed)
-        x, y, _, idx = gen.build()
-        model = shakespeare_lstm(vocab=gen.vocab)
-        task = make_stage_task(model, cut=2, kind="xent")
-        return task, FederatedDataset.from_arrays(x, y, idx, seed=seed), "accuracy"
-    if name == "gaze":
-        gen = SyntheticRegressionTask(n_clients=n_clients, seed=seed)
-        x, y, _, idx = gen.build()
-        model = mlp(gen.d_in, [128, 64], gen.d_out)
-        task = make_stage_task(model, cut=1, kind="mse")
-        return task, FederatedDataset.from_arrays(x, y, idx, seed=seed), "angular_deg"
-    raise KeyError(name)
-
-
-def evaluate(task, state, fed, batch: int = 256, max_batches: int = 8,
-             max_clients: int = 40):
-    """Test metrics matching the paper's protocol (§4.1).
-
-    SFL-family (global client model): pooled sample-wise test set.
-    PSL-family (per-client models, never aggregated): per-client
-    evaluation — each client's test samples are scored with THAT
-    client's model, sample-weighted (a mean of unsynced client models
-    is not a model anyone owns).
-    """
-    if state.client_global is not None:
-        cp = state.client_global.params
-        xs, ys = fed.test_arrays()
-        n = min(len(xs), batch * max_batches)
-        losses, mets, ws = [], [], []
-        for i in range(0, n, batch):
-            out = task.predict(cp, state.server.params,
-                               jnp.asarray(xs[i:i + batch]))
-            losses.append(float(task.loss(out, jnp.asarray(ys[i:i + batch]))))
-            mets.append({k: float(v) for k, v in
-                         task.metrics(out, jnp.asarray(ys[i:i + batch])).items()})
-            ws.append(len(xs[i:i + batch]))
-        agg = {k: float(np.average([m[k] for m in mets], weights=ws))
-               for k in mets[0]}
-        return float(np.average(losses, weights=ws)), agg
-
-    # per-client evaluation (vmapped: one trace, truncated to the common
-    # test size so client stacks are rectangular)
-    idxs = [i for i, c in enumerate(fed.clients) if len(c.x_test)][:max_clients]
-    t = min(len(fed.clients[i].x_test) for i in idxs)
-    xs = jnp.asarray(np.stack([fed.clients[i].x_test[:t] for i in idxs]))
-    ys = jnp.asarray(np.stack([fed.clients[i].y_test[:t] for i in idxs]))
-    cps = jax.tree.map(lambda x: x[np.asarray(idxs)], state.clients.params)
-    sp = state.server.params
-
-    def one(cp, x, y):
-        out = task.predict(cp, sp, x)
-        return task.loss(out, y), task.metrics(out, y)
-
-    losses, mets = jax.vmap(one)(cps, xs, ys)
-    agg = {k: float(jnp.mean(v)) for k, v in mets.items()}
-    return float(jnp.mean(losses)), agg
 
 
 def run(algo_name: str, task_name: str = "image", rounds: int = 100,
@@ -116,58 +29,24 @@ def run(algo_name: str, task_name: str = "image", rounds: int = 100,
         lr_server: float = 1e-3, lr_client: float = 1e-3, alpha: float = 0.5,
         server_epochs: int = 1, seed: int = 0, width: int = 16, cut: int = 2,
         eval_every: int = 20, ckpt_dir: str | None = None, log=print):
-    task, fed, metric_key = build_task(task_name, n_clients, alpha, seed,
-                                       width, cut)
-    algo = make_algorithm(algo_name, task, adam(lr_server), adam(lr_client),
-                          CycleConfig(server_epochs=server_epochs))
-    state = algo.init(jax.random.PRNGKey(seed), fed.n_clients)
-    rng = np.random.default_rng(seed + 1)
-    tracker = GradStabilityTracker()
-    history = []
-    t0 = time.time()
-    for rnd in range(rounds):
-        cohort = sample_cohort(fed.n_clients, attendance, rng, min_cohort=2)
-        xs = np.stack([fed.clients[c].sample_batch(rng, batch)[0] for c in cohort])
-        ys = np.stack([fed.clients[c].sample_batch(rng, batch)[1] for c in cohort])
-        state, metrics = algo.round(state, jnp.asarray(cohort),
-                                    jnp.asarray(xs), jnp.asarray(ys),
-                                    jax.random.PRNGKey(seed * 100_000 + rnd))
-        tracker.update(metrics)
-        if (rnd + 1) % eval_every == 0 or rnd == rounds - 1:
-            loss, mets = evaluate(task, state, fed)
-            history.append({"round": rnd + 1, "test_loss": loss, **mets,
-                            "train_loss": float(metrics["server_loss"]),
-                            "elapsed_s": round(time.time() - t0, 1)})
-            log(f"[{algo_name}] round {rnd+1:4d} test_loss={loss:.4f} "
-                f"{metric_key}={mets[metric_key]:.4f}")
-            if ckpt_dir:
-                save_checkpoint(ckpt_dir, rnd + 1, state,
-                                metadata={"algo": algo_name})
-    return {"algo": algo_name, "task": task_name, "history": history,
-            "grad_stability": tracker.summary()}
+    """Kwargs-style wrapper kept for the examples/tests; new code should
+    construct an ExperimentConfig and an Engine directly."""
+    cfg = ExperimentConfig(
+        algo=algo_name, task=task_name, rounds=rounds, n_clients=n_clients,
+        attendance=attendance, batch=batch, lr_server=lr_server,
+        lr_client=lr_client, alpha=alpha, seed=seed, width=width, cut=cut,
+        eval_every=eval_every, ckpt_dir=ckpt_dir,
+        cycle=CycleConfig(server_epochs=server_epochs))
+    return Engine(cfg, log=log).run()
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--algo", default="cyclesfl", choices=sorted(ALGORITHMS))
-    ap.add_argument("--task", default="image",
-                    choices=["image", "cifar", "charlm", "gaze"])
-    ap.add_argument("--rounds", type=int, default=100)
-    ap.add_argument("--clients", type=int, default=100)
-    ap.add_argument("--attendance", type=float, default=0.05)
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--alpha", type=float, default=0.5)
-    ap.add_argument("--server-epochs", type=int, default=1)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--width", type=int, default=16)
-    ap.add_argument("--cut", type=int, default=2)
-    ap.add_argument("--ckpt-dir", default=None)
+    ExperimentConfig.add_arguments(ap)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    res = run(args.algo, args.task, args.rounds, args.clients,
-              args.attendance, args.batch, alpha=args.alpha,
-              server_epochs=args.server_epochs, seed=args.seed,
-              width=args.width, cut=args.cut, ckpt_dir=args.ckpt_dir)
+    cfg = ExperimentConfig.from_flags(args)
+    res = Engine(cfg).run()
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

@@ -57,6 +57,48 @@ def _shape_dims(s: str):
     return dt, [int(d) for d in dims.split(",")] if dims else (dt, [])
 
 
+def _split_operands(s: str) -> list[str]:
+    """Split an HLO operand list on top-level commas only (shape dims and
+    layouts contain commas too: ``f32[128,64]{1,0} %arg``)."""
+    out, depth, buf = [], 0, []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(buf).strip())
+            buf = []
+        else:
+            buf.append(ch)
+    if buf:
+        out.append("".join(buf).strip())
+    return [o for o in out if o]
+
+
+def _operand_name(tok: str) -> str:
+    return tok.split()[-1].lstrip("%")
+
+
+def _operand_shape(tok: str, sym_shape: dict) -> tuple:
+    """Dims of an operand reference: newer HLO inlines the shape
+    (``f32[128,64]{1,0} %arg``); older text is a bare ``%arg`` resolved
+    through the computation's symbol table."""
+    first = tok.split()[0] if tok.split() else ""
+    m = _SHAPE_RE.match(first)
+    if m:
+        dims = m.group(2)
+        return tuple(int(d) for d in dims.split(",")) if dims else ()
+    return sym_shape.get(_operand_name(tok), ())
+
+
+def _operand_bytes(tok: str, sym_bytes: dict) -> int:
+    first = tok.split()[0] if tok.split() else ""
+    if _SHAPE_RE.match(first):
+        return _shape_bytes(first)
+    return sym_bytes.get(_operand_name(tok), 0)
+
+
 def _shape_bytes(s: str) -> int:
     m = _SHAPE_RE.match(s)
     if not m:
@@ -275,10 +317,9 @@ def module_cost(text: str) -> ModuleCost:
                         # read slice ≈ the update operand's size
                         um = re.search(r"dynamic-update-slice\(([^)]*)\)", ln)
                         if um:
-                            ops_ = [o.strip().lstrip("%")
-                                    for o in um.group(1).split(",")]
+                            ops_ = _split_operands(um.group(1))
                             if len(ops_) > 1:
-                                sliced += sym_b.get(ops_[1], 0)
+                                sliced += _operand_bytes(ops_[1], sym_b)
                     else:
                         sliced += _all_shapes_bytes(
                             dm2.group(2).split("(", 1)[0])
@@ -322,8 +363,8 @@ def module_cost(text: str) -> ModuleCost:
                     out_prod *= d
                 contract = 1
                 cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
-                lhs_name = dmatch.group(1).split(",")[0].strip().lstrip("%")
-                lhs_shape = sym_shape.get(lhs_name, ())
+                dops = _split_operands(dmatch.group(1))
+                lhs_shape = _operand_shape(dops[0], sym_shape) if dops else ()
                 if cd and lhs_shape:
                     for di in (int(x) for x in cd.group(1).split(",") if x):
                         if di < len(lhs_shape):
@@ -337,9 +378,9 @@ def module_cost(text: str) -> ModuleCost:
                 cm_ = re.search(r"convolution\(([^)]*)\)", rhs)
                 k_contract = 1
                 if cm_:
-                    ops_ = [o.strip().lstrip("%") for o in cm_.group(1).split(",")]
-                    if len(ops_) > 1 and ops_[1] in sym_shape:
-                        ksh = sym_shape[ops_[1]]
+                    ops_ = _split_operands(cm_.group(1))
+                    if len(ops_) > 1:
+                        ksh = _operand_shape(ops_[1], sym_shape)
                         for d in ksh[:-1]:   # all but output-feature dim
                             k_contract *= d
                 cost.flops += mult * 2.0 * out_prod * k_contract
@@ -361,9 +402,9 @@ def module_cost(text: str) -> ModuleCost:
                         if depth == 0:
                             break
                     buf.append(ch)
-                for a in "".join(buf).split(","):
-                    a = a.strip().lstrip("%")
-                    nbytes += sym_bytes.get(a, 0) or _all_shapes_bytes(a)
+                for a in _split_operands("".join(buf)):
+                    nbytes += _operand_bytes(a, sym_bytes) \
+                        or _all_shapes_bytes(a)
                 if nbytes == 0:
                     nbytes = sym_bytes.get(name, 0)
                 cost.collective_bytes += mult * nbytes
@@ -380,8 +421,8 @@ def module_cost(text: str) -> ModuleCost:
                     am = re.search(re.escape(opname) + r"\(([^)]*)\)", rhs)
                     operands = []
                     if am:
-                        operands = [sym_bytes.get(a.strip().lstrip("%"), 0)
-                                    for a in am.group(1).split(",")]
+                        operands = [_operand_bytes(a, sym_bytes)
+                                    for a in _split_operands(am.group(1))]
                     if opname == "dynamic-update-slice":
                         # in-place: traffic = read+write of the UPDATE slice,
                         # not the full aliased buffer

@@ -1,8 +1,16 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+The whole module is skipped when hypothesis isn't installed (it is an
+optional dev dependency — see requirements-dev.txt), so the tier-1
+suite collects cleanly either way.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.feature_store import FeatureStore, gather_batch, resample_plan
 from repro.kernels import ref
