@@ -1,0 +1,218 @@
+"""Round-latency benchmark: compile count, steady-state latency,
+rounds/sec — the evidence behind the compile-once contract.
+
+The Engine pads every cohort to the static capacity C_max and threads an
+attendance mask through the jitted round, so ONE XLA trace serves every
+live cohort size the protocol produces.  This harness measures, per
+algorithm:
+
+* ``padded``            — variable attendance, fixed shapes: compile
+                          count (must be 1), steady-state round latency,
+                          rounds/sec.
+* ``unpadded_variable`` — the same variable-attendance stream without
+                          padding: one retrace per distinct cohort size
+                          (what wall-clock used to be dominated by).
+* ``fixed_size_comparison`` — padded vs the legacy unpadded path at a
+                          FIXED cohort size, interleaved measurement:
+                          the steady-state baseline the padded path
+                          must not regress against.
+* ``by_cohort_size``    — padded rounds/sec across capacities.
+
+Writes ``BENCH_round_latency.json`` so every PR records the perf
+trajectory (CI runs ``--smoke`` and uploads the artifact).
+
+  PYTHONPATH=src python benchmarks/bench_round.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from repro.api import Engine, ExperimentConfig
+
+ALGOS = ("psl", "cyclepsl", "cyclesfl")
+
+
+def _drive(eng: Engine, rounds: int) -> list[float]:
+    """Run ``rounds`` rounds through the Engine's sampling protocol and
+    return per-round wall times (device-synced)."""
+    state = eng.init_state()
+    rng = np.random.default_rng(eng.cfg.seed + 1)
+    times = []
+    for rnd in range(rounds):
+        cohort, xs, ys, mask = eng.sample_round(rng)
+        t0 = time.perf_counter()
+        if mask is None:
+            state, m = eng.algo.round(state, cohort, xs, ys,
+                                      eng.round_key(rnd))
+        else:
+            state, m = eng.algo.round(state, cohort, xs, ys,
+                                      eng.round_key(rnd), mask)
+        jax.block_until_ready(m["server_loss"])
+        times.append(time.perf_counter() - t0)
+    return times
+
+
+def _steady(times: list[float], warmup: int = 2) -> float:
+    tail = times[warmup:] or times
+    return float(np.median(tail))
+
+
+def _engine(cfg: ExperimentConfig) -> Engine:
+    return Engine(cfg, donate=False, log=lambda *a, **k: None)
+
+
+def _round_call(eng: Engine):
+    """A zero-sampling-cost round closure over one drawn cohort."""
+    state = eng.init_state()
+    rng = np.random.default_rng(eng.cfg.seed + 1)
+    cohort, xs, ys, mask = eng.sample_round(rng)
+    key = eng.round_key(0)
+    if mask is None:
+        return lambda: eng.algo.round(state, cohort, xs, ys,
+                                      key)[1]["server_loss"]
+    return lambda: eng.algo.round(state, cohort, xs, ys, key,
+                                  mask)[1]["server_loss"]
+
+
+def _interleaved(call_a, call_b, iters: int) -> tuple[float, float]:
+    """Median wall time of two compiled calls, alternated every
+    iteration — and with the within-pair ORDER alternated too, so CPU
+    frequency/cache drift and first-in-pair warmup bias hit both
+    equally."""
+    for call in (call_a, call_b):                   # compile + warm
+        jax.block_until_ready(call())
+        jax.block_until_ready(call())
+    ta, tb = [], []
+    for i in range(iters):
+        first, second, tf, ts = ((call_a, call_b, ta, tb) if i % 2 == 0
+                                 else (call_b, call_a, tb, ta))
+        t0 = time.perf_counter()
+        jax.block_until_ready(first())
+        tf.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(second())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ta)), float(np.median(tb))
+
+
+def bench_algo(algo: str, base: ExperimentConfig, rounds: int,
+               capacities: tuple[int, ...]) -> dict:
+    out = {}
+
+    # 1. padded + variable attendance: the compile-once path
+    eng = _engine(replace(base, algo=algo, variable_attendance=True,
+                          pad_cohorts=True))
+    times = _drive(eng, rounds)
+    out["padded"] = {
+        "compile_count": eng.algo.trace_count,
+        "first_round_s": round(times[0], 4),
+        "steady_ms": round(_steady(times) * 1e3, 3),
+        "rounds_per_sec": round(1.0 / _steady(times), 2),
+        "cohort_capacity": eng.cohort_capacity,
+    }
+
+    # 2. same variable-attendance stream, no padding: one retrace per
+    #    distinct live cohort size
+    eng = _engine(replace(base, algo=algo, variable_attendance=True,
+                          pad_cohorts=False))
+    times = _drive(eng, rounds)
+    out["unpadded_variable"] = {
+        "compile_count": eng.algo.trace_count,
+        "total_s": round(sum(times), 3),
+        "steady_ms": round(_steady(times) * 1e3, 3),
+    }
+
+    # 3. steady-state at a FIXED cohort size == capacity, padded vs the
+    #    legacy unpadded path, interleaved so timer drift is shared:
+    #    this is the "padding costs nothing once shapes are stable" claim
+    eng_pad = _engine(replace(base, algo=algo, variable_attendance=False,
+                              pad_cohorts=True))
+    eng_fix = _engine(replace(base, algo=algo, variable_attendance=False,
+                              pad_cohorts=False))
+    pad_ms, fix_ms = _interleaved(_round_call(eng_pad), _round_call(eng_fix),
+                                  iters=max(20, rounds))
+    out["fixed_size_comparison"] = {
+        "padded_steady_ms": round(pad_ms * 1e3, 3),
+        "unpadded_steady_ms": round(fix_ms * 1e3, 3),
+        "padded_over_unpadded": round(pad_ms / fix_ms, 3),
+    }
+
+    # 4. padded rounds/sec across cohort capacities
+    by_size = {}
+    for cap in capacities:
+        att = cap / base.n_clients
+        eng = _engine(replace(base, algo=algo, attendance=att,
+                              variable_attendance=True, pad_cohorts=True))
+        times = _drive(eng, max(4, rounds // 2))
+        by_size[str(eng.cohort_capacity)] = {
+            "steady_ms": round(_steady(times) * 1e3, 3),
+            "rounds_per_sec": round(1.0 / _steady(times), 2),
+            "compile_count": eng.algo.trace_count,
+        }
+    out["by_cohort_size"] = by_size
+
+    out["claims"] = {
+        "compile_once": out["padded"]["compile_count"] == 1,
+        "unpadded_retraces_exceed_one":
+            out["unpadded_variable"]["compile_count"] > 1,
+        # steady-state: padded must not regress vs the legacy fixed-size
+        # path (10% slack absorbs residual CPU timer noise at ms scale)
+        "padded_steady_no_worse_than_unpadded_fixed":
+            out["fixed_size_comparison"]["padded_over_unpadded"] <= 1.10,
+    }
+    return out
+
+
+def run(smoke: bool = False) -> dict:
+    if smoke:
+        base = ExperimentConfig(task="image", rounds=1, n_clients=24,
+                                attendance=0.25, batch=8, width=4, cut=2,
+                                seed=0, eval_every=10**9)
+        rounds, capacities = 8, (3, 6)
+    else:
+        base = ExperimentConfig(task="image", rounds=1, n_clients=60,
+                                attendance=0.2, batch=16, width=8, cut=2,
+                                seed=0, eval_every=10**9)
+        rounds, capacities = 16, (4, 8, 16)
+    result = {
+        "backend": jax.default_backend(),
+        "mode": "smoke" if smoke else "full",
+        "config": {"n_clients": base.n_clients, "attendance": base.attendance,
+                   "batch": base.batch, "width": base.width,
+                   "rounds_timed": rounds},
+        "algos": {},
+    }
+    for algo in ALGOS:
+        result["algos"][algo] = bench_algo(algo, base, rounds, capacities)
+        c = result["algos"][algo]["claims"]
+        fx = result["algos"][algo]["fixed_size_comparison"]
+        print(f"[{algo}] compile_once={c['compile_once']} "
+              f"padded_ms={fx['padded_steady_ms']} "
+              f"unpadded_ms={fx['unpadded_steady_ms']} "
+              f"ratio={fx['padded_over_unpadded']} "
+              f"unpadded_variable_compiles="
+              f"{result['algos'][algo]['unpadded_variable']['compile_count']}")
+    return result
+
+
+def main() -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI")
+    ap.add_argument("--out", default="BENCH_round_latency.json")
+    args = ap.parse_args()
+    result = run(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

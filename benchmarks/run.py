@@ -79,12 +79,15 @@ def bench_cyclesl_round() -> list[tuple[str, float, str]]:
                      log=lambda *a, **k: None)
         state = eng.init_state()
         rng = np.random.default_rng(0)
-        cohort, xs, ys = eng.sample_round(rng)
-        key, c = eng.round_key(1), jnp.asarray(cohort)
+        cohort, xs, ys, mask = eng.sample_round(rng)
+        key = eng.round_key(1)
         t = _time_fn(
-            lambda: eng.algo.round(state, c, xs, ys, key)[1]["server_loss"],
+            lambda: eng.algo.round(state, cohort, xs, ys, key,
+                                   mask)[1]["server_loss"],
             iters=3, warmup=1)
-        rows.append((f"round_{name}", t, f"cohort={len(cohort)}"))
+        live = len(cohort) if mask is None else int(mask.sum())
+        rows.append((f"round_{name}", t,
+                     f"cohort={live}/cap={len(cohort)}"))
     return rows
 
 

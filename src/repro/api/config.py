@@ -36,6 +36,13 @@ class ExperimentConfig:
     # per-round PRNG stream: key = PRNGKey(seed * round_key_salt + round)
     round_key_salt: int = 100_000
     collect_timing: bool = False      # block per round and report round_time_s
+    # pad every cohort to the static capacity C_max = ceil(attendance * N)
+    # and thread an attendance mask through the round, so ONE compiled
+    # round function serves every live cohort size (no XLA retraces)
+    pad_cohorts: bool = True
+    # realistic availability: per-round cohort size ~ Binomial(N, attendance)
+    # (clipped to [min_cohort, C_max]) instead of the fixed round(a*N)
+    variable_attendance: bool = False
     cycle: CycleConfig = field(default_factory=CycleConfig)
 
     # ---------------------------------------------------------- builders
@@ -90,6 +97,11 @@ class ExperimentConfig:
         ap.add_argument("--cut", type=int, default=2)
         ap.add_argument("--eval-every", type=int, default=20)
         ap.add_argument("--ckpt-dir", default=None)
+        ap.add_argument("--no-pad-cohorts", action="store_true",
+                        help="disable fixed-shape padded cohorts (forces an "
+                             "XLA retrace per distinct cohort size)")
+        ap.add_argument("--variable-attendance", action="store_true",
+                        help="Binomial(N, attendance) cohort sizes per round")
         return ap
 
     @classmethod
@@ -101,6 +113,8 @@ class ExperimentConfig:
             lr_client=args.lr_client, alpha=args.alpha, seed=args.seed,
             width=args.width, cut=args.cut, eval_every=args.eval_every,
             ckpt_dir=args.ckpt_dir,
+            pad_cohorts=not args.no_pad_cohorts,
+            variable_attendance=args.variable_attendance,
             cycle=CycleConfig(server_epochs=args.server_epochs,
                               server_batch=args.server_batch,
                               grad_clip=args.grad_clip),

@@ -8,6 +8,12 @@ off-CPU), then drive it for ``cfg.rounds`` rounds with the paper's
 protocol (partial attendance, sample-wise eval split, fixed per-round
 key stream).
 
+Rounds are compile-once: every cohort is padded to the static capacity
+``C_max = ceil(attendance * N)`` with an attendance mask threaded
+through the round (see :mod:`repro.api.phases`), so the jitted round
+traces exactly once per experiment no matter how live attendance varies
+round to round — wall-clock measures the algorithm, not XLA retraces.
+
 Pluggable callbacks observe the loop without forking it::
 
     eng = Engine(ExperimentConfig(algo="cyclesfl", rounds=100))
@@ -18,6 +24,7 @@ metrics)`` and/or ``on_eval(engine, rnd, loss, mets)``.
 """
 from __future__ import annotations
 
+import math
 import time
 from typing import Optional, Sequence
 
@@ -47,19 +54,39 @@ def evaluate(task, state, fed, batch: int = 256, max_batches: int = 8,
     is not a model anyone owns).
     """
     if state.client_global is not None:
-        cp = state.client_global.params
+        # pooled sample-wise test set: stack the full batches into ONE
+        # vmapped device call, score the remainder in a second call, and
+        # sync device->host once at the end (instead of a float() sync
+        # per test batch, which serializes host and device)
+        cp, sp = state.client_global.params, state.server.params
         xs, ys = fed.test_arrays()
         n = min(len(xs), batch * max_batches)
+        nfull, rem = divmod(n, batch)
+
+        def one(x, y):
+            out = task.predict(cp, sp, x)
+            return task.loss(out, y), task.metrics(out, y)
+
         losses, mets, ws = [], [], []
-        for i in range(0, n, batch):
-            out = task.predict(cp, state.server.params,
-                               jnp.asarray(xs[i:i + batch]))
-            losses.append(float(task.loss(out, jnp.asarray(ys[i:i + batch]))))
-            mets.append({k: float(v) for k, v in
-                         task.metrics(out, jnp.asarray(ys[i:i + batch])).items()})
-            ws.append(len(xs[i:i + batch]))
-        agg = {k: float(np.average([m[k] for m in mets], weights=ws))
-               for k in mets[0]}
+        if nfull:
+            xb = jnp.asarray(xs[:nfull * batch]).reshape(
+                (nfull, batch) + xs.shape[1:])
+            yb = jnp.asarray(ys[:nfull * batch]).reshape(
+                (nfull, batch) + ys.shape[1:])
+            lb, mb = jax.vmap(one)(xb, yb)
+            losses.append(lb)
+            mets.append(mb)
+            ws += [batch] * nfull
+        if rem:
+            lr_, mr = one(jnp.asarray(xs[nfull * batch:n]),
+                          jnp.asarray(ys[nfull * batch:n]))
+            losses.append(jnp.reshape(lr_, (1,)))
+            mets.append(jax.tree.map(lambda v: jnp.reshape(v, (1,)), mr))
+            ws.append(rem)
+        losses, mets = jax.device_get((jnp.concatenate(losses),
+                                       {k: jnp.concatenate([m[k] for m in mets])
+                                        for k in mets[0]}))
+        agg = {k: float(np.average(v, weights=ws)) for k, v in mets.items()}
         return float(np.average(losses, weights=ws)), agg
 
     # per-client evaluation (vmapped: one trace, truncated to the common
@@ -107,8 +134,25 @@ class Engine:
         if donate is None:
             # buffer donation is a no-op XLA warning on CPU; enable elsewhere
             donate = jax.default_backend() != "cpu"
+        program = get_program(cfg.algo)
+        if (cfg.pad_cohorts and cfg.variable_attendance
+                and any(getattr(p, "mode", None) == "cycle"
+                        for p in program.phases)):
+            # the masked inner loop's server batch is static; if it can
+            # exceed the smallest possible live pool (min_cohort clients),
+            # a low-attendance round would fill ZERO valid steps and the
+            # server would silently not train that round — reject upfront
+            sb = cfg.cycle.server_batch or cfg.batch
+            if sb > cfg.batch * cfg.min_cohort:
+                raise ValueError(
+                    f"cycle.server_batch={sb} can exceed the smallest "
+                    f"possible live feature pool (min_cohort={cfg.min_cohort}"
+                    f" x batch={cfg.batch} = {cfg.min_cohort * cfg.batch} "
+                    "rows) under variable attendance, which would leave the "
+                    "server inner loop with zero valid steps in sparse "
+                    "rounds; lower cycle.server_batch or raise min_cohort")
         self.algo: SLAlgorithm = build_algorithm(
-            get_program(cfg.algo), task,
+            program, task,
             adam(cfg.lr_server), adam(cfg.lr_client), cfg.cycle,
             donate=donate)
 
@@ -121,16 +165,60 @@ class Engine:
         return jax.random.PRNGKey(self.cfg.seed * self.cfg.round_key_salt
                                   + rnd)
 
-    def sample_round(self, rng: np.random.Generator):
-        """Cohort ids + aligned per-client (x, y) batches for one round."""
+    @property
+    def cohort_capacity(self) -> int:
+        """C_max: the static cohort shape every round is padded to.
+
+        Deterministic attendance always draws exactly
+        ``round(attendance * N)`` clients, so the capacity matches the
+        sampler and no slot is ever padded; only variable attendance
+        needs the ceil upper bound (Binomial draws above the mean are
+        clipped to it).
+        """
         cfg = self.cfg
+        n = self.fed.n_clients
+        if cfg.variable_attendance:
+            # tolerant ceil: 0.3 * 20 is 6.000000000000001 in binary
+            cap = math.ceil(cfg.attendance * n - 1e-9)
+        else:
+            cap = round(cfg.attendance * n)
+        return min(max(cfg.min_cohort, cap), n)
+
+    def sample_round(self, rng: np.random.Generator):
+        """Cohort ids, aligned per-client (x, y) batches, and the
+        attendance mask for one round.
+
+        With ``cfg.pad_cohorts`` (the default) the cohort is padded to
+        the static :attr:`cohort_capacity`: padded slots carry the
+        out-of-range sentinel id N (dropped by the commit scatter),
+        zeroed batches, and a 0 in the mask — so the jitted round sees
+        ONE shape for the whole experiment regardless of live
+        attendance.  ``mask`` is ``None`` when padding is disabled.
+        """
+        cfg = self.cfg
+        cap = self.cohort_capacity if cfg.pad_cohorts else None
         cohort = sample_cohort(self.fed.n_clients, cfg.attendance, rng,
-                               min_cohort=cfg.min_cohort)
+                               min_cohort=cfg.min_cohort,
+                               variable=cfg.variable_attendance,
+                               max_cohort=cap)
         pairs = [self.fed.clients[c].sample_batch(rng, cfg.batch)
                  for c in cohort]
-        xs = jnp.asarray(np.stack([p[0] for p in pairs]))
-        ys = jnp.asarray(np.stack([p[1] for p in pairs]))
-        return cohort, xs, ys
+        xs = np.stack([p[0] for p in pairs])
+        ys = np.stack([p[1] for p in pairs])
+        if cap is None:
+            return jnp.asarray(cohort), jnp.asarray(xs), jnp.asarray(ys), None
+        pad = cap - len(cohort)
+        mask = np.ones(cap, np.float32)
+        if pad:
+            cohort = np.concatenate(
+                [cohort, np.full(pad, self.fed.n_clients, cohort.dtype)])
+            xs = np.concatenate([xs, np.zeros((pad,) + xs.shape[1:],
+                                              xs.dtype)])
+            ys = np.concatenate([ys, np.zeros((pad,) + ys.shape[1:],
+                                              ys.dtype)])
+            mask[-pad:] = 0.0
+        return (jnp.asarray(cohort), jnp.asarray(xs), jnp.asarray(ys),
+                jnp.asarray(mask))
 
     def _emit(self, hook: str, *args):
         for cb in self.callbacks:
@@ -148,10 +236,14 @@ class Engine:
         round_time = 0.0
         t0 = time.time()
         for rnd in range(cfg.rounds):
-            cohort, xs, ys = self.sample_round(rng)
+            cohort, xs, ys, mask = self.sample_round(rng)
             t_round = time.time()
-            state, metrics = self.algo.round(state, jnp.asarray(cohort),
-                                             xs, ys, self.round_key(rnd))
+            if mask is None:
+                state, metrics = self.algo.round(state, cohort, xs, ys,
+                                                 self.round_key(rnd))
+            else:
+                state, metrics = self.algo.round(state, cohort, xs, ys,
+                                                 self.round_key(rnd), mask)
             if cfg.collect_timing:
                 jax.block_until_ready(metrics["server_loss"])
                 if rnd > 0:                       # skip the compile round

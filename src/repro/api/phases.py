@@ -33,8 +33,9 @@ from repro.core.cyclesl import (CycleConfig, client_update_one,
                                 server_inner_loop)
 from repro.core.feature_store import FeatureStore
 from repro.core.protocol import (EntityState, broadcast_entity, entity_mean,
-                                 entity_step, init_entity, put_entities,
-                                 take_entities)
+                                 entity_step, init_entity, masked_axis0_mean,
+                                 masked_entity_mean, put_entities,
+                                 select_entities, take_entities)
 from repro.core.split import SplitTask
 from repro.optim import Optimizer
 
@@ -53,11 +54,23 @@ class TrainState(NamedTuple):
 
 @dataclass(frozen=True)
 class SLAlgorithm:
-    """Compiled algorithm: what the drivers actually call."""
+    """Compiled algorithm: what the drivers actually call.
+
+    ``round`` accepts an optional trailing attendance ``mask`` ([C]
+    float, 1.0 = live slot); without it the classic unpadded semantics
+    apply.  ``trace_count`` exposes how many times the round function
+    has been (re)traced by XLA — the compile-stability contract is ONE
+    trace per (algo, config) for the whole experiment.
+    """
     name: str
     init: Callable[..., TrainState]
     round: Callable[..., tuple[TrainState, dict]]
     uses_global_client: bool
+    traces: Any = None
+
+    @property
+    def trace_count(self) -> int:
+        return self.traces["count"] if self.traces else 0
 
 
 @dataclass(frozen=True)
@@ -71,12 +84,21 @@ class PhaseContext:
 
 @dataclass
 class RoundVars:
-    """Mutable scratch flowing phase-to-phase inside one jit trace."""
+    """Mutable scratch flowing phase-to-phase inside one jit trace.
+
+    ``mask`` is the attendance mask over cohort SLOTS ([C] float, 1.0 =
+    live client, 0.0 = padded slot), or ``None`` on the classic unpadded
+    path.  Padded slots carry the out-of-range sentinel id N in
+    ``cohort`` and zeroed ``xs``/``ys``; every phase excludes them from
+    pooled/averaged quantities so the padded round is numerically
+    identical to an unpadded round over the live slots alone.
+    """
     state: TrainState
     cohort: Any                       # [C] int client ids
     xs: Any                           # [C, b, ...] inputs
     ys: Any                           # [C, b, ...] labels
     key: Any
+    mask: Any = None                  # [C] attendance mask (None = unpadded)
     cohort_clients: Optional[EntityState] = None
     server_prev: Any = None           # θ_S^t params, pre-ServerUpdate
     feats: Any = None                 # [C, b, ...] smashed data
@@ -91,11 +113,24 @@ class Phase:
         raise NotImplementedError
 
 
-def feat_grad_metrics(fgrads) -> dict:
+def masked_mean(x, mask):
+    """Mean over the live cohort slots (all slots when ``mask`` is None).
+    With an all-ones mask this is bit-identical to ``jnp.mean``."""
+    if mask is None:
+        return jnp.mean(x)
+    return jnp.sum(jnp.where(mask > 0, x, 0)) / jnp.sum(mask)
+
+
+def feat_grad_metrics(fgrads, mask=None) -> dict:
     fg = fgrads.reshape(fgrads.shape[0], -1).astype(jnp.float32)
     norms = jnp.linalg.norm(fg, axis=-1) / jnp.sqrt(fg.shape[-1])
-    return {"feat_grad_norm_mean": jnp.mean(norms),
-            "feat_grad_norm_std": jnp.std(norms)}
+    if mask is None:
+        return {"feat_grad_norm_mean": jnp.mean(norms),
+                "feat_grad_norm_std": jnp.std(norms)}
+    mu = masked_mean(norms, mask)
+    var = masked_mean(jnp.square(jnp.abs(norms - mu)), mask)
+    return {"feat_grad_norm_mean": mu,
+            "feat_grad_norm_std": jnp.sqrt(var)}
 
 
 # ----------------------------------------------------------------- phases
@@ -142,7 +177,8 @@ class ServerUpdate(Phase):
 
     def __call__(self, ctx, v):
         if self.mode == "cycle":
-            store = FeatureStore.pool(jax.lax.stop_gradient(v.feats), v.ys)
+            store = FeatureStore.pool(jax.lax.stop_gradient(v.feats), v.ys,
+                                      mask=v.mask)
             server, sloss = server_inner_loop(
                 ctx.task, v.state.server, ctx.opt_server, store, v.key,
                 ctx.cycle, batch=jax.tree.leaves(v.ys)[0].shape[1])
@@ -152,15 +188,18 @@ class ServerUpdate(Phase):
             rep = broadcast_entity(v.state.server, v.ys.shape[0])
             rep = jax.vmap(lambda e, g: entity_step(e, g, ctx.opt_server))(
                 rep, gs)
-            server = entity_mean(rep)
-            v.metrics["server_loss"] = jnp.mean(losses)
+            server = (entity_mean(rep) if v.mask is None
+                      else masked_entity_mean(rep, v.mask))
+            v.metrics["server_loss"] = masked_mean(losses, v.mask)
         elif self.mode == "mean_grad":
             losses, gs = _pair_server_losses_and_grads(ctx, v)
-            server = entity_step(
-                v.state.server,
-                jax.tree.map(lambda g: jnp.mean(g, axis=0), gs),
-                ctx.opt_server)
-            v.metrics["server_loss"] = jnp.mean(losses)
+            if v.mask is None:
+                gmean = jax.tree.map(lambda g: jnp.mean(g, axis=0), gs)
+            else:
+                gmean = jax.tree.map(
+                    lambda g: masked_axis0_mean(g, v.mask), gs)
+            server = entity_step(v.state.server, gmean, ctx.opt_server)
+            v.metrics["server_loss"] = masked_mean(losses, v.mask)
         else:
             raise ValueError(f"unknown ServerUpdate mode {self.mode!r}")
         v.state = v.state._replace(server=server)
@@ -185,8 +224,9 @@ class FeatureGradients(Phase):
                else self.average)
         ccfg = (ctx.cycle if avg == ctx.cycle.avg_client_grads
                 else replace(ctx.cycle, avg_client_grads=avg))
-        v.fgrads = feature_gradients(ctx.task, params, v.feats, v.ys, ccfg)
-        v.metrics.update(feat_grad_metrics(v.fgrads))
+        v.fgrads = feature_gradients(ctx.task, params, v.feats, v.ys, ccfg,
+                                     mask=v.mask)
+        v.metrics.update(feat_grad_metrics(v.fgrads, mask=v.mask))
 
 
 @dataclass(frozen=True)
@@ -204,18 +244,29 @@ class ClientUpdate(Phase):
     def __call__(self, ctx, v):
         clip = ctx.cycle.grad_clip
         if self.chained:
-            def body(entity, inp):
-                x, g = inp
-                return client_update_one(ctx.task, entity, x, g,
-                                         ctx.opt_client, clip)
-            v.cohort_clients, gnorms = jax.lax.scan(
-                body, v.state.client_global, (v.xs, v.fgrads))
+            if v.mask is None:
+                def body(entity, inp):
+                    x, g = inp
+                    return client_update_one(ctx.task, entity, x, g,
+                                             ctx.opt_client, clip)
+                v.cohort_clients, gnorms = jax.lax.scan(
+                    body, v.state.client_global, (v.xs, v.fgrads))
+            else:
+                # padded slots pass the chained carry through unchanged
+                def body(entity, inp):
+                    x, g, m = inp
+                    new, gn = client_update_one(ctx.task, entity, x, g,
+                                                ctx.opt_client, clip)
+                    return (select_entities(m, new, entity),
+                            jnp.where(m > 0, gn, 0.0))
+                v.cohort_clients, gnorms = jax.lax.scan(
+                    body, v.state.client_global, (v.xs, v.fgrads, v.mask))
         else:
             v.cohort_clients, gnorms = client_updates(
                 ctx.task, v.cohort_clients, ctx.opt_client, v.xs, v.fgrads,
-                grad_clip=clip)
+                grad_clip=clip, mask=v.mask)
         if self.record_gnorm:
-            v.metrics["client_grad_norm_mean"] = jnp.mean(gnorms)
+            v.metrics["client_grad_norm_mean"] = masked_mean(gnorms, v.mask)
 
 
 @dataclass(frozen=True)
@@ -232,10 +283,14 @@ class Commit(Phase):
     def __call__(self, ctx, v):
         state, cc = v.state, v.cohort_clients
         if self.mode == "per_client":
+            # padded slots carry the OOB sentinel id; put_entities'
+            # mode="drop" scatter discards their (already zeroed) updates
             v.state = state._replace(
                 clients=put_entities(state.clients, v.cohort, cc))
         elif self.mode == "average":
-            v.state = state._replace(client_global=entity_mean(cc))
+            v.state = state._replace(
+                client_global=(entity_mean(cc) if v.mask is None
+                               else masked_entity_mean(cc, v.mask)))
         elif self.mode == "global":
             v.state = state._replace(client_global=cc)
         else:
@@ -253,10 +308,11 @@ class SequentialChainRound(Phase):
 
     def __call__(self, ctx, v):
         task, opt_s, opt_c = ctx.task, ctx.opt_server, ctx.opt_client
+        masked = v.mask is not None
 
         def body(carry, inp):
             server, client = carry
-            x, y = inp
+            x, y = inp[:2]
 
             def loss_fn(c, s):
                 return task.e2e_loss(c, s, x, y)
@@ -265,13 +321,20 @@ class SequentialChainRound(Phase):
             f = task.client_forward(client.params, x)
             fg = jax.grad(lambda ff: task.server_loss(
                 jax.lax.stop_gradient(server.params), ff, y))(f)
-            return ((entity_step(server, gs, opt_s),
-                     entity_step(client, gc, opt_c)), (loss, fg))
+            new_s = entity_step(server, gs, opt_s)
+            new_c = entity_step(client, gc, opt_c)
+            if masked:
+                m = inp[2]
+                new_s = select_entities(m, new_s, server)
+                new_c = select_entities(m, new_c, client)
+                loss = jnp.where(m > 0, loss, 0.0)
+            return (new_s, new_c), (loss, fg)
 
+        inputs = (v.xs, v.ys, v.mask) if masked else (v.xs, v.ys)
         (server, client), (losses, fg) = jax.lax.scan(
-            body, (v.state.server, v.state.client_global), (v.xs, v.ys))
-        v.metrics.update(server_loss=jnp.mean(losses),
-                         **feat_grad_metrics(fg))
+            body, (v.state.server, v.state.client_global), inputs)
+        v.metrics.update(server_loss=masked_mean(losses, v.mask),
+                         **feat_grad_metrics(fg, mask=v.mask))
         v.state = v.state._replace(server=server, client_global=client)
 
 
@@ -282,11 +345,12 @@ class ServerSequentialRound(Phase):
 
     def __call__(self, ctx, v):
         task, opt_s, opt_c = ctx.task, ctx.opt_server, ctx.opt_client
+        masked = v.mask is not None
         cohort_clients = broadcast_entity(v.state.client_global,
                                           v.ys.shape[0])
 
         def body(server, inp):
-            cp, x, y = inp
+            cp, x, y = inp[:3]
 
             def loss_fn(c, s):
                 return task.e2e_loss(c, s, x, y)
@@ -295,16 +359,25 @@ class ServerSequentialRound(Phase):
             f = task.client_forward(cp, x)
             fg = jax.grad(lambda ff: task.server_loss(
                 jax.lax.stop_gradient(server.params), ff, y))(f)
-            return entity_step(server, gs, opt_s), (loss, gc, fg)
+            new_s = entity_step(server, gs, opt_s)
+            if masked:
+                m = inp[3]
+                new_s = select_entities(m, new_s, server)
+                loss = jnp.where(m > 0, loss, 0.0)
+            return new_s, (loss, gc, fg)
 
+        inputs = ((cohort_clients.params, v.xs, v.ys, v.mask) if masked
+                  else (cohort_clients.params, v.xs, v.ys))
         server, (losses, gc, fg) = jax.lax.scan(
-            body, v.state.server, (cohort_clients.params, v.xs, v.ys))
-        cohort_clients = jax.vmap(
+            body, v.state.server, inputs)
+        stepped = jax.vmap(
             lambda e, g: entity_step(e, g, ctx.opt_client))(cohort_clients, gc)
-        v.metrics.update(server_loss=jnp.mean(losses),
-                         **feat_grad_metrics(fg))
+        client_global = (entity_mean(stepped) if not masked
+                         else masked_entity_mean(stepped, v.mask))
+        v.metrics.update(server_loss=masked_mean(losses, v.mask),
+                         **feat_grad_metrics(fg, mask=v.mask))
         v.state = v.state._replace(server=server,
-                                   client_global=entity_mean(cohort_clients))
+                                   client_global=client_global)
 
 
 @dataclass(frozen=True)
@@ -326,12 +399,17 @@ class LocalFedAvgRound(Phase):
             return (entity_step(se, gs, opt_s),
                     entity_step(ce, gc, opt_c), loss)
 
-        servers, clients, losses = jax.vmap(one)(servers, clients, v.xs, v.ys)
-        v.metrics.update(server_loss=jnp.mean(losses),
+        new_servers, new_clients, losses = jax.vmap(one)(servers, clients,
+                                                         v.xs, v.ys)
+        if v.mask is None:
+            server, client = entity_mean(new_servers), entity_mean(new_clients)
+        else:
+            server = masked_entity_mean(new_servers, v.mask)
+            client = masked_entity_mean(new_clients, v.mask)
+        v.metrics.update(server_loss=masked_mean(losses, v.mask),
                          feat_grad_norm_mean=jnp.zeros(()),
                          feat_grad_norm_std=jnp.zeros(()))
-        v.state = v.state._replace(server=entity_mean(servers),
-                                   client_global=entity_mean(clients))
+        v.state = v.state._replace(server=server, client_global=client)
 
 
 # ---------------------------------------------------------------- program
@@ -370,13 +448,16 @@ def build_algorithm(program: RoundProgram, task: SplitTask,
     cannot honor donation).
     """
     ctx = PhaseContext(task, opt_server, opt_client, cycle)
+    traces = {"count": 0}
 
     def init(key, n_clients: int) -> TrainState:
         return init_train_state(key, n_clients, task, opt_server, opt_client,
                                 program.uses_global_client)
 
-    def round_impl(state, cohort, xs, ys, key):
-        v = RoundVars(state=state, cohort=cohort, xs=xs, ys=ys, key=key)
+    def round_impl(state, cohort, xs, ys, key, mask=None):
+        traces["count"] += 1          # executes at trace time only
+        v = RoundVars(state=state, cohort=cohort, xs=xs, ys=ys, key=key,
+                      mask=mask)
         for phase in program.phases:
             phase(ctx, v)
         return v.state, v.metrics
@@ -384,4 +465,4 @@ def build_algorithm(program: RoundProgram, task: SplitTask,
     round_fn = (jax.jit(round_impl, donate_argnums=(0,)) if donate
                 else jax.jit(round_impl))
     return SLAlgorithm(program.name, init, round_fn,
-                       program.uses_global_client)
+                       program.uses_global_client, traces)

@@ -1,6 +1,7 @@
 """CycleSL core: split tasks, feature store, cyclical updates, SL zoo."""
 from repro.core.split import SplitTask, make_stage_task, make_transformer_task
-from repro.core.feature_store import FeatureStore, resample_plan
+from repro.core.feature_store import (FeatureStore, masked_resample_plan,
+                                      resample_plan)
 from repro.core.cyclesl import cyclesl_round, CycleConfig
 from repro.core.protocol import EntityState, init_entity
 from repro.core.algorithms import make_algorithm, ALGORITHMS

@@ -25,8 +25,10 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.feature_store import FeatureStore, gather_batch, resample_plan
-from repro.core.protocol import EntityState, entity_step
+from repro.core.feature_store import (FeatureStore, gather_batch,
+                                      masked_resample_plan, resample_plan)
+from repro.core.protocol import (EntityState, entity_step, masked_axis0_mean,
+                                 select_entities)
 from repro.core.split import SplitTask
 from repro.optim import Optimizer, clip_by_global_norm
 
@@ -62,14 +64,30 @@ class CycleConfig:
 def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
                       store: FeatureStore, key, ccfg: CycleConfig,
                       batch: int) -> tuple[EntityState, jnp.ndarray]:
-    """E epochs of minibatch training on the resampled feature dataset."""
+    """E epochs of minibatch training on the resampled feature dataset.
+
+    When the store carries a row-validity mask (padded cohort), the plan
+    comes from :func:`masked_resample_plan`: the scan always runs the
+    static capacity's worth of steps, but steps whose rows are not all
+    live are exact no-ops (the entity passes through unchanged, the loss
+    is excluded from the mean) — so one compiled loop serves every live
+    cohort size, with numerics identical to an unpadded pool of just the
+    live rows.
+    """
     sb = min(ccfg.server_batch or batch, store.size)
-    plan = resample_plan(key, store.size, ccfg.server_epochs, sb)
+    if store.valid is None:
+        plan = resample_plan(key, store.size, ccfg.server_epochs, sb)
+        step_ok = None
+    else:
+        plan, step_ok = masked_resample_plan(key, store.valid,
+                                             ccfg.server_epochs, sb)
     if ccfg.server_steps is not None:
         plan = plan[:, : ccfg.server_steps]
+        if step_ok is not None:
+            step_ok = step_ok[:, : ccfg.server_steps]
     plan2 = plan.reshape(-1, sb)                     # [E*steps, sb]
 
-    def one_step(entity, idx):
+    def apply_step(entity, idx):
         f, y = gather_batch(store, idx)
         if ccfg.batch_constraint is not None:
             f, y = ccfg.batch_constraint(f, y)
@@ -77,13 +95,36 @@ def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
         grads = _maybe_clip(grads, ccfg.grad_clip)
         return entity_step(entity, grads, opt_s), loss
 
-    server, losses = jax.lax.scan(one_step, server, plan2)
-    return server, jnp.mean(losses)
+    if step_ok is None:
+        server, losses = jax.lax.scan(apply_step, server, plan2)
+        return server, jnp.mean(losses)
+
+    # the loss sum rides the scan carry: sequential accumulation (with
+    # exact-zero no-ops for masked steps) is invariant to how much
+    # padding follows the live steps, unlike a post-hoc jnp.sum whose
+    # SIMD reduction tree depends on the array length
+    def one_step(carry, inp):
+        entity, acc = carry
+        idx, ok = inp
+        stepped, loss = apply_step(entity, idx)
+        return ((select_entities(ok, stepped, entity),
+                 acc + jnp.where(ok, loss, 0.0)), None)
+
+    ok2 = step_ok.reshape(-1)
+    (server, loss_sum), _ = jax.lax.scan(
+        one_step, (server, jnp.zeros((), jnp.float32)), (plan2, ok2))
+    denom = jnp.maximum(jnp.sum(ok2.astype(loss_sum.dtype)), 1.0)
+    return server, loss_sum / denom
 
 
 def feature_gradients(task: SplitTask, server_params, feats, ys,
-                      ccfg: CycleConfig):
-    """B_i^g for every cohort member, with θ_S^{t+1} frozen (Eq. 5)."""
+                      ccfg: CycleConfig, mask=None):
+    """B_i^g for every cohort member, with θ_S^{t+1} frozen (Eq. 5).
+
+    ``mask`` ([C], 1.0 = live slot) restricts the SGLR-style cohort-mean
+    to live slots so padded members neither contribute to nor dilute the
+    averaged gradient.
+    """
     frozen = jax.lax.stop_gradient(server_params)
 
     def per_client(f, y):
@@ -91,8 +132,9 @@ def feature_gradients(task: SplitTask, server_params, feats, ys,
 
     grads = jax.vmap(per_client)(feats, ys)          # [C, b, ...]
     if ccfg.avg_client_grads:
-        grads = jnp.broadcast_to(jnp.mean(grads, axis=0, keepdims=True),
-                                 grads.shape)
+        mean = (jnp.mean(grads, axis=0) if mask is None
+                else masked_axis0_mean(grads, mask))
+        grads = jnp.broadcast_to(mean[None], grads.shape)
     return grads
 
 
@@ -119,12 +161,21 @@ def client_update_one(task: SplitTask, entity: EntityState, x, g,
 
 def client_updates(task: SplitTask, clients: EntityState, opt_c: Optimizer,
                    xs, feat_grads,
-                   grad_clip: Optional[float] = None
-                   ) -> tuple[EntityState, jnp.ndarray]:
-    """Pull B_i^g through each client's VJP and take one optimizer step."""
+                   grad_clip: Optional[float] = None,
+                   mask=None) -> tuple[EntityState, jnp.ndarray]:
+    """Pull B_i^g through each client's VJP and take one optimizer step.
+
+    With ``mask`` set, padded slots receive a zeroed update: their entity
+    (params, optimizer state, step counter) passes through unchanged and
+    their grad norm reads 0, so the commit phase's scatter/average sees
+    no contribution from them.
+    """
     new_clients, gnorms = jax.vmap(
         lambda e, x, g: client_update_one(task, e, x, g, opt_c, grad_clip))(
             clients, xs, feat_grads)
+    if mask is not None:
+        new_clients = select_entities(mask, new_clients, clients)
+        gnorms = jnp.where(mask > 0, gnorms, 0.0)
     return new_clients, gnorms
 
 

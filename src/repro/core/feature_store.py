@@ -5,26 +5,52 @@ server resamples *shuffled* mini-batches that are no longer client-
 bound.  On a pod the pooled array stays sharded over the 'data' axis and
 resampling is a sharded permutation-gather (the `feature_resample`
 Pallas kernel covers the shard-local gather).
+
+Two resampling plans live here:
+
+* :func:`resample_plan` — the classic dense plan (one
+  ``jax.random.permutation`` per server epoch) used when every pooled
+  row is live.
+* :func:`masked_resample_plan` — the padded-cohort plan: rows are
+  ordered by per-row counter-based uniforms (``fold_in(key, row)``),
+  with padded rows pushed past the live ones.  Because each row's sort
+  key depends only on ``(key, row_index)`` — never on the pool's padded
+  capacity — the sequence of live rows it yields is *identical* for any
+  capacity ≥ the live count.  That shape-invariance is what makes the
+  padded round bit-for-bit equal to the unpadded one (tests/test_padded).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 
 class FeatureStore(NamedTuple):
-    """Pooled smashed data: features [T, ...], labels pytree of [T, ...]."""
+    """Pooled smashed data: features [T, ...], labels pytree of [T, ...].
+
+    ``valid`` is an optional [T] row mask (1.0 = live row, 0.0 = a row
+    contributed by a padded cohort slot); ``None`` means every row is
+    live (the classic unpadded pool).
+    """
     features: jax.Array
     labels: jax.Array
+    valid: Optional[jax.Array] = None
 
     @classmethod
-    def pool(cls, feature_batches, label_batches) -> "FeatureStore":
+    def pool(cls, feature_batches, label_batches, mask=None) -> "FeatureStore":
         """[C, b, ...] per-client batches -> pooled [C*b, ...].
-        Labels may be any pytree of [C, b, ...] arrays."""
+        Labels may be any pytree of [C, b, ...] arrays.  ``mask`` is an
+        optional [C] cohort attendance mask; it is broadcast to a per-row
+        validity mask over the pooled axis."""
         merge = lambda a: a.reshape((-1,) + a.shape[2:])
-        return cls(merge(feature_batches), jax.tree.map(merge, label_batches))
+        valid = None
+        if mask is not None:
+            b = feature_batches.shape[1]
+            valid = jnp.repeat(jnp.asarray(mask, jnp.float32), b)
+        return cls(merge(feature_batches), jax.tree.map(merge, label_batches),
+                   valid)
 
     @property
     def size(self) -> int:
@@ -37,8 +63,37 @@ def resample_plan(key, total: int, epochs: int, batch: int) -> jax.Array:
     shuffling, §3.1).  Truncates the tail that doesn't fill a batch."""
     steps = total // batch
     keys = jax.random.split(key, epochs)
-    perms = jnp.stack([jax.random.permutation(k, total) for k in keys])
+    perms = jax.vmap(lambda k: jax.random.permutation(k, total))(keys)
     return perms[:, : steps * batch].reshape(epochs, steps, batch)
+
+
+def masked_resample_plan(key, valid, epochs: int,
+                         batch: int) -> tuple[jax.Array, jax.Array]:
+    """Padded-pool plan: [epochs, steps, batch] indices + [epochs, steps]
+    step-validity mask.
+
+    Each row r draws a sort key from ``uniform(fold_in(key_e, r))`` —
+    a pure function of (epoch key, row id), independent of the pool's
+    padded capacity — and padded rows are pushed to +inf, so the sorted
+    order lists the live rows first, in a capacity-invariant random
+    order.  A step is valid iff all ``batch`` of its rows are live,
+    which reproduces the dense plan's drop-the-tail truncation for the
+    live row count.
+    """
+    total = valid.shape[0]
+    steps = total // batch
+    rows = jnp.arange(total)
+    n_valid = jnp.sum(valid > 0)
+
+    def one_epoch(k):
+        u = jax.vmap(lambda r: jax.random.uniform(jax.random.fold_in(k, r))
+                     )(rows)
+        return jnp.argsort(jnp.where(valid > 0, u, jnp.inf))
+
+    perms = jax.vmap(one_epoch)(jax.random.split(key, epochs))
+    plan = perms[:, : steps * batch].reshape(epochs, steps, batch)
+    step_ok = ((jnp.arange(steps) + 1) * batch <= n_valid)
+    return plan, jnp.broadcast_to(step_ok, (epochs, steps))
 
 
 def gather_batch(store: FeatureStore, idx) -> tuple[jax.Array, jax.Array]:

@@ -28,6 +28,13 @@ def init_entity(params, opt: Optimizer) -> EntityState:
 
 
 def entity_step(entity: EntityState, grads, opt: Optimizer) -> EntityState:
+    apply = getattr(opt, "apply", None)
+    if apply is not None:
+        # fused path (e.g. the Pallas fused-Adam kernel): one pass that
+        # produces new params + new optimizer state directly
+        new_params, new_opt = apply(grads, entity.opt_state, entity.params,
+                                    entity.step)
+        return EntityState(new_params, new_opt, entity.step + 1)
     updates, new_opt = opt.update(grads, entity.opt_state, entity.params,
                                   entity.step)
     return EntityState(apply_updates(entity.params, updates), new_opt,
@@ -40,8 +47,14 @@ def stack_entities(entities: list[EntityState]) -> EntityState:
 
 
 def entity_mean(stacked: EntityState) -> EntityState:
-    """FedAvg-style aggregation over the leading cohort dim."""
-    return jax.tree.map(lambda x: jnp.mean(x, axis=0), stacked)
+    """FedAvg-style aggregation over the leading cohort dim.
+
+    Dtype-preserving: the int32 ``step`` counter stays int32 (its mean is
+    exactly integral — every cohort member stepped once), so the state's
+    avals are stable round-over-round and the jitted round never retraces.
+    """
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0).astype(x.dtype),
+                        stacked)
 
 
 def broadcast_entity(entity: EntityState, n: int) -> EntityState:
@@ -51,8 +64,45 @@ def broadcast_entity(entity: EntityState, n: int) -> EntityState:
 
 
 def take_entities(stacked: EntityState, idx) -> EntityState:
-    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), stacked)
+    # mode="clip": padded cohort slots carry the OOB sentinel id N; clamping
+    # reads *some* valid client (the result is masked out downstream) instead
+    # of the NaN fill that would poison masked arithmetic.
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0, mode="clip"),
+                        stacked)
 
 
 def put_entities(stacked: EntityState, idx, values: EntityState) -> EntityState:
-    return jax.tree.map(lambda x, v: x.at[idx].set(v), stacked, values)
+    # mode="drop": scatter writes at OOB indices are discarded, so padded
+    # cohort slots (sentinel id N) are structural no-ops.
+    return jax.tree.map(lambda x, v: x.at[idx].set(v, mode="drop"),
+                        stacked, values)
+
+
+def masked_axis0_mean(x, mask):
+    """Masked, dtype-preserving mean over the leading axis: rows with
+    mask 0 contribute exact zeros and are excluded from the count.  With
+    an all-ones mask this is bit-identical to ``jnp.mean(x, axis=0)``
+    (appending exact zeros to a sum and dividing by the same count
+    changes nothing)."""
+    mb = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+    return (jnp.sum(jnp.where(mb > 0, x, 0), axis=0) / jnp.sum(mask)
+            ).astype(x.dtype)
+
+
+def masked_entity_mean(stacked: EntityState, mask) -> EntityState:
+    """FedAvg over the live slots only: ``mask`` is [C] with 1.0 for live
+    cohort members, 0.0 for padded slots."""
+    return jax.tree.map(lambda x: masked_axis0_mean(x, mask), stacked)
+
+
+def select_entities(mask, new: EntityState, old: EntityState) -> EntityState:
+    """Per-slot select over stacked entities: live slots (mask 1) take
+    ``new``, padded slots keep ``old``.  ``mask`` is [C] (or a scalar,
+    for use inside a scan body)."""
+    m = jnp.asarray(mask)
+
+    def one(n, o):
+        mb = m.reshape(m.shape + (1,) * (n.ndim - m.ndim))
+        return jnp.where(mb > 0, n, o)
+
+    return jax.tree.map(one, new, old)

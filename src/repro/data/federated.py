@@ -55,7 +55,23 @@ class FederatedDataset:
 
 
 def sample_cohort(n_clients: int, attendance: float,
-                  rng: np.random.Generator, min_cohort: int = 1) -> np.ndarray:
-    """Partial participation: sample ceil(attendance * N) distinct clients."""
-    k = max(min_cohort, int(round(attendance * n_clients)))
+                  rng: np.random.Generator, min_cohort: int = 1,
+                  variable: bool = False,
+                  max_cohort: int | None = None) -> np.ndarray:
+    """Partial participation: sample distinct attending clients.
+
+    ``variable=False`` (the paper's protocol) fixes the cohort size at
+    ``round(attendance * N)``.  ``variable=True`` models realistic
+    availability: each client attends i.i.d. with probability
+    ``attendance``, so the per-round size is Binomial(N, attendance) —
+    clipped to ``[min_cohort, max_cohort]`` so padded execution has a
+    static capacity to pad to.
+    """
+    if variable:
+        k = int(rng.binomial(n_clients, attendance))
+    else:
+        k = int(round(attendance * n_clients))
+    k = max(min_cohort, k)
+    if max_cohort is not None:
+        k = min(k, max_cohort)
     return rng.choice(n_clients, size=min(k, n_clients), replace=False)

@@ -12,6 +12,7 @@ leaf-wise over a pytree.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,9 +44,16 @@ def _adam_kernel(p_ref, g_ref, m_ref, v_ref, t_ref,
 def fused_adam(p, g, m, v, step, *, lr: float, b1: float = 0.9,
                b2: float = 0.999, eps: float = 1e-8,
                weight_decay: float = 0.0, block: int = 65536,
-               interpret: bool = True):
+               interpret: Optional[bool] = None):
     """One Adam step on flat arrays.  p/g any float dtype, m/v fp32,
-    step scalar int32.  Returns (p', m', v')."""
+    step scalar int32.  Returns (p', m', v').
+
+    ``interpret=None`` selects the mode from the backend (compiled on
+    TPU, Pallas interpreter elsewhere) — the same gate
+    ``repro.kernels.ops.default_interpret`` applies to every kernel.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n = p.size
     p1, g1 = p.reshape(-1), g.reshape(-1)
     m1, v1 = m.reshape(-1), v.reshape(-1)

@@ -17,8 +17,14 @@ from repro.kernels import ssd_scan as _ssd
 from repro.kernels import topk_gating as _tk
 
 
-def _default_interpret() -> bool:
+def default_interpret() -> bool:
+    """One backend gate for every kernel: compiled on TPU, Pallas
+    interpreter everywhere else (the kernels are TPU-targeted and the
+    interpreter is the validated CPU fallback)."""
     return jax.default_backend() != "tpu"
+
+
+_default_interpret = default_interpret            # backwards-compat alias
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "softcap",
@@ -30,24 +36,24 @@ def flash_attention(q, k, v, *, causal: bool = True,
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                softcap=softcap, block_q=block_q,
                                block_k=block_k,
-                               interpret=_default_interpret())
+                               interpret=default_interpret())
 
 
 @partial(jax.jit, static_argnames=("chunk",))
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128):
     return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
-                         interpret=_default_interpret())
+                         interpret=default_interpret())
 
 
 @partial(jax.jit, static_argnames=("k", "block_t"))
 def topk_gating(logits, k: int, *, block_t: int = 1024):
     return _tk.topk_gating(logits, k, block_t=block_t,
-                           interpret=_default_interpret())
+                           interpret=default_interpret())
 
 
 @jax.jit
 def feature_resample(src, idx):
-    return _fr.feature_resample(src, idx, interpret=_default_interpret())
+    return _fr.feature_resample(src, idx, interpret=default_interpret())
 
 
 @partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "weight_decay"))
@@ -57,4 +63,4 @@ def fused_adam(p, g, m, v, step, *, lr: float, b1: float = 0.9,
     from repro.kernels import fused_adam as _fa2
     return _fa2.fused_adam(p, g, m, v, step, lr=lr, b1=b1, b2=b2, eps=eps,
                            weight_decay=weight_decay,
-                           interpret=_default_interpret())
+                           interpret=default_interpret())

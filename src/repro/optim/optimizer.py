@@ -25,6 +25,12 @@ import jax.numpy as jnp
 class Optimizer:
     init: Callable[[Any], Any]
     update: Callable[..., tuple[Any, Any]]   # (grads, state, params, step)
+    # optional fused step: (grads, state, params, step) -> (params', state').
+    # When set, repro.core.protocol.entity_step uses it instead of
+    # update + apply_updates — one kernel pass over each leaf instead of
+    # a chain of unfused elementwise tree-maps (the Pallas fused-Adam
+    # path).  Must be numerically equivalent to the update path.
+    apply: Optional[Callable[..., tuple[Any, Any]]] = None
 
 
 def apply_updates(params, updates):
@@ -51,8 +57,24 @@ def sgd(lr: float | Callable[[Any], Any], momentum: float = 0.0) -> Optimizer:
 
 
 def adam(lr: float | Callable[[Any], Any], b1: float = 0.9, b2: float = 0.999,
-         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         fused: Optional[bool] = None) -> Optimizer:
+    """Adam with an optional fused (Pallas) step.
+
+    ``fused=None`` auto-selects: the fused kernel runs compiled on TPU
+    and is skipped elsewhere (the interpreter would be slower than the
+    jnp tree-map path).  ``fused=True`` forces it — off-TPU that means
+    Pallas interpret mode, which is what the equivalence tests exercise.
+    Fusion requires a constant ``lr`` (the kernel specializes on it);
+    schedules fall back to the jnp path.
+    """
     sched = lr if callable(lr) else (lambda step: lr)
+    if fused is None:
+        fused = (not callable(lr)) and jax.default_backend() == "tpu"
+    if fused and callable(lr):
+        raise ValueError("fused adam requires a constant lr "
+                         "(the kernel specializes on it); pass fused=False "
+                         "for schedules")
 
     def init(params):
         zeros = lambda p: jnp.zeros_like(p, jnp.float32)
@@ -75,7 +97,22 @@ def adam(lr: float | Callable[[Any], Any], b1: float = 0.9, b2: float = 0.999,
                 upd, params)
         return upd, {"m": m, "v": v}
 
-    return Optimizer(init, update)
+    def apply(grads, state, params, step):
+        # leaf-wise fused update: each (p, g, m, v) streams through VMEM
+        # exactly once per step instead of once per tree-map above
+        from repro.kernels import ops
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_m = treedef.flatten_up_to(state["m"])
+        leaves_v = treedef.flatten_up_to(state["v"])
+        outs = [ops.fused_adam(p, g, m, v, step, lr=lr, b1=b1, b2=b2,
+                               eps=eps, weight_decay=weight_decay)
+                for p, g, m, v in zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+        return (treedef.unflatten([o[0] for o in outs]),
+                {"m": treedef.unflatten([o[1] for o in outs]),
+                 "v": treedef.unflatten([o[2] for o in outs])})
+
+    return Optimizer(init, update, apply if fused else None)
 
 
 def clip_by_global_norm(grads, max_norm: float):
