@@ -17,16 +17,28 @@ algorithm:
                           the steady-state baseline the padded path
                           must not regress against.
 * ``by_cohort_size``    — padded rounds/sec across capacities.
+* ``device_sweep``      — (``--devices 1,2,4,8``) rounds/sec of the
+                          mesh-native sharded Engine vs device count.
+                          Each count runs in a fresh subprocess with
+                          ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+                          (jax locks the device count at first init), a
+                          ``(N, 1)`` ('data', 'model') mesh, and the
+                          cohort capacity sized to divide every N.
 
 Writes ``BENCH_round_latency.json`` so every PR records the perf
-trajectory (CI runs ``--smoke`` and uploads the artifact).
+trajectory (CI runs ``--smoke --devices 1,2,4`` and uploads the
+artifact).
 
   PYTHONPATH=src python benchmarks/bench_round.py [--smoke] [--out PATH]
+      [--devices 1,2,4,8]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 from dataclasses import replace
 
@@ -169,6 +181,58 @@ def bench_algo(algo: str, base: ExperimentConfig, rounds: int,
     return out
 
 
+# ------------------------------------------------------- device sweep
+def sweep_worker(n_devices: int, smoke: bool) -> dict:
+    """One sharded measurement at the CURRENT process's device count:
+    cohort capacity 8 (divides 1/2/4/8), mesh (N, 1) over
+    ('data', 'model'), variable attendance so the masked compile-once
+    path is what's timed."""
+    cfg = ExperimentConfig(
+        algo="cyclesfl", task="image", rounds=1, n_clients=32,
+        attendance=0.25, batch=8, width=4 if smoke else 8, cut=2, seed=0,
+        eval_every=10**9, variable_attendance=True,
+        mesh_shape=(n_devices, 1), mesh_axes=("data", "model"))
+    eng = _engine(cfg)
+    rounds = 8 if smoke else 16
+    times = _drive(eng, rounds)
+    return {
+        "devices": n_devices,
+        "jax_device_count": jax.device_count(),
+        "cohort_capacity": eng.cohort_capacity,
+        "compile_count": eng.algo.trace_count,
+        "first_round_s": round(times[0], 4),
+        "steady_ms": round(_steady(times) * 1e3, 3),
+        "rounds_per_sec": round(1.0 / _steady(times), 2),
+    }
+
+
+def device_sweep(devices: list[int], smoke: bool) -> dict:
+    """Spawn one subprocess per device count (XLA_FLAGS must bind before
+    jax initializes) and collect rounds/sec vs devices."""
+    out = {}
+    for n in devices:
+        env = dict(os.environ)
+        # append so user-set XLA flags survive (last occurrence wins for
+        # the device count itself)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count={n}"
+                            ).strip()
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--sweep-worker", str(n)]
+        if smoke:
+            cmd.append("--smoke")
+        proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
+        if proc.returncode != 0:
+            out[str(n)] = {"error": proc.stderr[-2000:]}
+            continue
+        rec = json.loads(proc.stdout.strip().splitlines()[-1])
+        out[str(n)] = rec
+        print(f"[devices={n}] steady_ms={rec['steady_ms']} "
+              f"rounds_per_sec={rec['rounds_per_sec']} "
+              f"compile_count={rec['compile_count']}")
+    return out
+
+
 def run(smoke: bool = False) -> dict:
     if smoke:
         base = ExperimentConfig(task="image", rounds=1, n_clients=24,
@@ -206,8 +270,20 @@ def main() -> dict:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for CI")
     ap.add_argument("--out", default="BENCH_round_latency.json")
+    ap.add_argument("--devices", default=None,
+                    help="comma-separated device counts for the sharded "
+                         "Engine sweep, e.g. 1,2,4,8 (one subprocess per "
+                         "count)")
+    ap.add_argument("--sweep-worker", type=int, default=None,
+                    help=argparse.SUPPRESS)     # internal: one sweep point
     args = ap.parse_args()
+    if args.sweep_worker is not None:
+        print(json.dumps(sweep_worker(args.sweep_worker, args.smoke)))
+        return {}
     result = run(smoke=args.smoke)
+    if args.devices:
+        result["device_sweep"] = device_sweep(
+            [int(x) for x in args.devices.split(",")], args.smoke)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"wrote {args.out}")

@@ -43,13 +43,24 @@ class ExperimentConfig:
     # realistic availability: per-round cohort size ~ Binomial(N, attendance)
     # (clipped to [min_cohort, C_max]) instead of the fixed round(a*N)
     variable_attendance: bool = False
+    # --- mesh-native execution (replaces the old un-serializable
+    # CycleConfig.batch_constraint callable hook) ---
+    # device mesh laid over the first prod(mesh_shape) devices, e.g.
+    # (8, 1) over ('data', 'model'); None = classic single-device round
+    mesh_shape: Optional[tuple] = None
+    mesh_axes: tuple = ("data", "model")
+    # shard the cohort/data dims over the batch axes (client stack's
+    # leading cohort dim, round batches, the pooled feature store, the
+    # resampled server minibatches); False = weight placement only
+    shard_cohort: bool = True
+    # resume from the latest checkpoint under ckpt_dir: Engine.run()
+    # restores the TrainState and continues at the saved round, keeping
+    # the eval/ckpt cadence and the cohort-sampling stream aligned
+    resume: bool = False
     cycle: CycleConfig = field(default_factory=CycleConfig)
 
     # ---------------------------------------------------------- builders
     def to_dict(self) -> dict:
-        if self.cycle.batch_constraint is not None:
-            raise ValueError("CycleConfig.batch_constraint is a callable "
-                             "sharding hook and cannot be serialized")
         return asdict(self)
 
     @classmethod
@@ -57,7 +68,16 @@ class ExperimentConfig:
         d = dict(d)
         cycle = d.pop("cycle", {})
         if not isinstance(cycle, CycleConfig):
+            cycle = dict(cycle)
+            # pre-mesh configs serialized the removed batch_constraint
+            # hook as null; tolerate the key so old JSONs still load
+            cycle.pop("batch_constraint", None)
             cycle = CycleConfig(**cycle)
+        # JSON round-trip turns tuples into lists; normalize back
+        if d.get("mesh_shape") is not None:
+            d["mesh_shape"] = tuple(int(s) for s in d["mesh_shape"])
+        if d.get("mesh_axes") is not None:
+            d["mesh_axes"] = tuple(d["mesh_axes"])
         known = {f.name for f in fields(cls)}
         unknown = set(d) - known
         if unknown:
@@ -72,6 +92,14 @@ class ExperimentConfig:
                            f"{sorted(PROGRAMS)}")
         if self.task not in TASKS:
             raise KeyError(f"unknown task {self.task!r}: {sorted(TASKS)}")
+        if self.mesh_shape is not None:
+            if len(self.mesh_shape) != len(self.mesh_axes):
+                raise ValueError(
+                    f"mesh_shape {self.mesh_shape} and mesh_axes "
+                    f"{self.mesh_axes} must have equal length")
+            if any(int(s) < 1 for s in self.mesh_shape):
+                raise ValueError(f"mesh_shape {self.mesh_shape} must be "
+                                 "positive")
         return self
 
     # ------------------------------------------------------------- flags
@@ -102,6 +130,17 @@ class ExperimentConfig:
                              "XLA retrace per distinct cohort size)")
         ap.add_argument("--variable-attendance", action="store_true",
                         help="Binomial(N, attendance) cohort sizes per round")
+        ap.add_argument("--mesh-shape", default=None,
+                        help="comma-separated mesh shape, e.g. 8,1 — run "
+                             "the mesh-native sharded Engine")
+        ap.add_argument("--mesh-axes", default="data,model",
+                        help="comma-separated mesh axis names")
+        ap.add_argument("--no-shard-cohort", action="store_true",
+                        help="mesh places weights only; cohort/data dims "
+                             "stay replicated")
+        ap.add_argument("--resume", action="store_true",
+                        help="resume from the latest checkpoint in "
+                             "--ckpt-dir")
         return ap
 
     @classmethod
@@ -115,6 +154,11 @@ class ExperimentConfig:
             ckpt_dir=args.ckpt_dir,
             pad_cohorts=not args.no_pad_cohorts,
             variable_attendance=args.variable_attendance,
+            mesh_shape=(tuple(int(s) for s in args.mesh_shape.split(","))
+                        if args.mesh_shape else None),
+            mesh_axes=tuple(args.mesh_axes.split(",")),
+            shard_cohort=not args.no_shard_cohort,
+            resume=args.resume,
             cycle=CycleConfig(server_epochs=args.server_epochs,
                               server_batch=args.server_batch,
                               grad_clip=args.grad_clip),

@@ -14,6 +14,16 @@ through the round (see :mod:`repro.api.phases`), so the jitted round
 traces exactly once per experiment no matter how live attendance varies
 round to round — wall-clock measures the algorithm, not XLA retraces.
 
+Mesh-native execution: with ``cfg.mesh_shape`` set the Engine builds
+the device mesh ONCE, places the TrainState with ``NamedSharding`` (the
+client stack's leading cohort dim over the batch axes, server weights
+FSDP/TP per :mod:`repro.sharding.specs` path rules), commits every
+round input to the batch axes, and pins the round's output shardings —
+one trace per (algo, config, mesh), and the 1-device mesh is bit-for-
+bit the unsharded path (constraints pin layout, never values).
+``cfg.resume`` restores the latest checkpoint under ``ckpt_dir`` and
+continues at the saved round with cadence and sampling stream aligned.
+
 Pluggable callbacks observe the loop without forking it::
 
     eng = Engine(ExperimentConfig(algo="cyclesfl", rounds=100))
@@ -33,14 +43,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.config import ExperimentConfig
-from repro.api.phases import SLAlgorithm, TrainState, build_algorithm
+from repro.api.phases import (SLAlgorithm, TrainState, build_algorithm,
+                              init_train_state)
 from repro.api.registry import get_program
 from repro.api.tasks import build_task
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.core.drift import GradStabilityTracker
 from repro.core.split import SplitTask
 from repro.data.federated import FederatedDataset, sample_cohort
+from repro.launch.mesh import make_engine_mesh
 from repro.optim import adam
+from repro.sharding.specs import batch_spec, train_state_shardings
 
 
 def evaluate(task, state, fed, batch: int = 256, max_batches: int = 8,
@@ -135,6 +148,22 @@ class Engine:
             # buffer donation is a no-op XLA warning on CPU; enable elsewhere
             donate = jax.default_backend() != "cpu"
         program = get_program(cfg.algo)
+        opt_s, opt_c = adam(cfg.lr_server), adam(cfg.lr_client)
+        # ---- mesh-native execution: build the mesh ONCE, derive the
+        # TrainState placement from the path-regex rules (server weights
+        # FSDP/TP, client stack's leading cohort dim over the batch
+        # axes), and pin it as the jitted round's out_shardings so the
+        # state sharding is stable round-over-round (compile-once per
+        # (algo, config, mesh)).
+        self.mesh = (make_engine_mesh(cfg.mesh_shape, cfg.mesh_axes)
+                     if cfg.mesh_shape is not None else None)
+        self.state_shardings = None
+        if self.mesh is not None:
+            a_state = jax.eval_shape(lambda: init_train_state(
+                jax.random.PRNGKey(0), fed.n_clients, task, opt_s, opt_c,
+                program.uses_global_client))
+            self.state_shardings = train_state_shardings(
+                a_state, self.mesh, shard_cohort=cfg.shard_cohort)
         if (cfg.pad_cohorts and cfg.variable_attendance
                 and any(getattr(p, "mode", None) == "cycle"
                         for p in program.phases)):
@@ -152,14 +181,28 @@ class Engine:
                     "server inner loop with zero valid steps in sparse "
                     "rounds; lower cycle.server_batch or raise min_cohort")
         self.algo: SLAlgorithm = build_algorithm(
-            program, task,
-            adam(cfg.lr_server), adam(cfg.lr_client), cfg.cycle,
-            donate=donate)
+            program, task, opt_s, opt_c, cfg.cycle,
+            donate=donate, mesh=self.mesh,
+            state_shardings=self.state_shardings,
+            shard_data=cfg.shard_cohort)
 
     # ------------------------------------------------------------ state
     def init_state(self) -> TrainState:
-        return self.algo.init(jax.random.PRNGKey(self.cfg.seed),
-                              self.fed.n_clients)
+        state = self.algo.init(jax.random.PRNGKey(self.cfg.seed),
+                               self.fed.n_clients)
+        if self.state_shardings is not None:
+            state = jax.device_put(state, self.state_shardings)
+        return state
+
+    def _place(self, arr):
+        """Commit a [C, ...] round input to the mesh batch axes (leading
+        cohort dim; no-op off-mesh or with cohort sharding disabled)."""
+        x = jnp.asarray(arr)
+        if self.mesh is None or not self.cfg.shard_cohort:
+            return x
+        from jax.sharding import NamedSharding
+        spec = batch_spec(self.mesh, x.shape[0], x.ndim - 1)
+        return jax.device_put(x, NamedSharding(self.mesh, spec))
 
     def round_key(self, rnd: int):
         return jax.random.PRNGKey(self.cfg.seed * self.cfg.round_key_salt
@@ -184,6 +227,24 @@ class Engine:
             cap = round(cfg.attendance * n)
         return min(max(cfg.min_cohort, cap), n)
 
+    def _sample_cohort_ids(self, rng: np.random.Generator):
+        cfg = self.cfg
+        return sample_cohort(self.fed.n_clients, cfg.attendance, rng,
+                             min_cohort=cfg.min_cohort,
+                             variable=cfg.variable_attendance,
+                             max_cohort=(self.cohort_capacity
+                                         if cfg.pad_cohorts else None))
+
+    def _replay_sampling(self, rng: np.random.Generator, rounds: int):
+        """Consume exactly the RNG draws ``rounds`` rounds of
+        :meth:`sample_round` would make — cohort ids plus each member's
+        batch indices — without materializing, padding, or placing any
+        array.  Resume fast-forwards through this so round ``n`` of a
+        resumed run draws the same cohort an uninterrupted run would."""
+        for _ in range(rounds):
+            for c in self._sample_cohort_ids(rng):
+                self.fed.clients[c].sample_indices(rng, self.cfg.batch)
+
     def sample_round(self, rng: np.random.Generator):
         """Cohort ids, aligned per-client (x, y) batches, and the
         attendance mask for one round.
@@ -197,16 +258,14 @@ class Engine:
         """
         cfg = self.cfg
         cap = self.cohort_capacity if cfg.pad_cohorts else None
-        cohort = sample_cohort(self.fed.n_clients, cfg.attendance, rng,
-                               min_cohort=cfg.min_cohort,
-                               variable=cfg.variable_attendance,
-                               max_cohort=cap)
+        cohort = self._sample_cohort_ids(rng)
         pairs = [self.fed.clients[c].sample_batch(rng, cfg.batch)
                  for c in cohort]
         xs = np.stack([p[0] for p in pairs])
         ys = np.stack([p[1] for p in pairs])
         if cap is None:
-            return jnp.asarray(cohort), jnp.asarray(xs), jnp.asarray(ys), None
+            return (self._place(cohort), self._place(xs), self._place(ys),
+                    None)
         pad = cap - len(cohort)
         mask = np.ones(cap, np.float32)
         if pad:
@@ -217,8 +276,8 @@ class Engine:
             ys = np.concatenate([ys, np.zeros((pad,) + ys.shape[1:],
                                               ys.dtype)])
             mask[-pad:] = 0.0
-        return (jnp.asarray(cohort), jnp.asarray(xs), jnp.asarray(ys),
-                jnp.asarray(mask))
+        return (self._place(cohort), self._place(xs), self._place(ys),
+                self._place(mask))
 
     def _emit(self, hook: str, *args):
         for cb in self.callbacks:
@@ -226,16 +285,55 @@ class Engine:
             if fn is not None:
                 fn(self, *args)
 
+    # ---------------------------------------------------------- resume
+    def restore(self, rng: np.random.Generator
+                ) -> tuple[Optional[TrainState], int]:
+        """Load the latest checkpoint under ``cfg.ckpt_dir`` and return
+        ``(state, start_round)``; ``(None, 0)`` when nothing to resume.
+
+        The checkpoint step is the 1-based round it was saved after, so
+        the run continues at exactly that round index and the eval/ckpt
+        cadence (``(rnd + 1) % eval_every``) stays aligned.  The cohort-
+        sampling stream is replayed through the skipped rounds so round
+        ``start_round`` draws the same cohort an uninterrupted run would
+        have drawn.
+        """
+        cfg = self.cfg
+        step = latest_step(cfg.ckpt_dir) if cfg.ckpt_dir else None
+        if step is None:
+            return None, 0
+        # structure/dtype template only — no init compute or placement
+        template = jax.eval_shape(
+            lambda: self.algo.init(jax.random.PRNGKey(cfg.seed),
+                                   self.fed.n_clients))
+        state, _ = load_checkpoint(cfg.ckpt_dir, template, step=step)
+        if self.state_shardings is not None:
+            state = jax.device_put(state, self.state_shardings)
+        self._replay_sampling(rng, step)
+        self.log(f"[{self.algo.name}] resumed from {cfg.ckpt_dir} at "
+                 f"round {step}")
+        return state, step
+
     # -------------------------------------------------------------- run
     def run(self, state: Optional[TrainState] = None) -> dict:
         cfg = self.cfg
-        state = self.init_state() if state is None else state
         rng = np.random.default_rng(cfg.seed + 1)
+        start_round = 0
+        if state is None and cfg.resume:
+            state, start_round = self.restore(rng)
+        if state is None:
+            state = self.init_state()
+        elif self.state_shardings is not None:
+            # caller-provided (or restored) states must sit on the mesh
+            # placement the jitted round's out_shardings pin, or round 1
+            # would see a different input sharding than round 0 and
+            # retrace — no-op when already placed
+            state = jax.device_put(state, self.state_shardings)
         tracker = GradStabilityTracker()
         history = []
-        round_time = 0.0
+        round_time, timed_rounds = 0.0, 0
         t0 = time.time()
-        for rnd in range(cfg.rounds):
+        for rnd in range(start_round, cfg.rounds):
             cohort, xs, ys, mask = self.sample_round(rng)
             t_round = time.time()
             if mask is None:
@@ -246,8 +344,9 @@ class Engine:
                                                  self.round_key(rnd), mask)
             if cfg.collect_timing:
                 jax.block_until_ready(metrics["server_loss"])
-                if rnd > 0:                       # skip the compile round
+                if rnd > start_round:             # skip the compile round
                     round_time += time.time() - t_round
+                    timed_rounds += 1
             tracker.update(metrics)
             self._emit("on_round", rnd, state, metrics)
             if (rnd + 1) % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
@@ -265,6 +364,8 @@ class Engine:
                 self._emit("on_eval", rnd, loss, mets)
         result = {"algo": self.algo.name, "task": cfg.task,
                   "history": history, "grad_stability": tracker.summary()}
+        if start_round:
+            result["resumed_from_round"] = start_round
         if cfg.collect_timing:
-            result["round_time_s"] = round_time / max(1, cfg.rounds - 1)
+            result["round_time_s"] = round_time / max(1, timed_rounds)
         return result

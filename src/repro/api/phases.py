@@ -31,13 +31,14 @@ import jax.numpy as jnp
 from repro.core.cyclesl import (CycleConfig, client_update_one,
                                 client_updates, feature_gradients,
                                 server_inner_loop)
-from repro.core.feature_store import FeatureStore
+from repro.core.feature_store import FeatureStore, constrain_store
 from repro.core.protocol import (EntityState, broadcast_entity, entity_mean,
                                  entity_step, init_entity, masked_axis0_mean,
                                  masked_entity_mean, put_entities,
                                  select_entities, take_entities)
 from repro.core.split import SplitTask
 from repro.optim import Optimizer
+from repro.sharding.specs import constrain_cohort, constrain_cohort_tree
 
 
 class TrainState(NamedTuple):
@@ -75,11 +76,20 @@ class SLAlgorithm:
 
 @dataclass(frozen=True)
 class PhaseContext:
-    """Static (trace-time) inputs shared by every phase of a round."""
+    """Static (trace-time) inputs shared by every phase of a round.
+
+    ``mesh`` (a ``jax.sharding.Mesh`` or ``None``) turns on the mesh-
+    native execution path: phases thread ``with_sharding_constraint``
+    through cohort-stacked activations (leading cohort dim over the
+    batch axes), the pooled feature dataset (rows over 'data'), and the
+    resampled server minibatches.  Constraints pin layout only, never
+    values — the 1-device-mesh round is bit-for-bit the unsharded one.
+    """
     task: SplitTask
     opt_server: Optimizer
     opt_client: Optimizer
     cycle: CycleConfig
+    mesh: Any = None
 
 
 @dataclass
@@ -146,9 +156,15 @@ class ExtractFeatures(Phase):
             broadcast_entity(state.client_global, v.ys.shape[0])
             if state.clients is None
             else take_entities(state.clients, v.cohort))
+        if ctx.mesh is not None:
+            # cohort-parallel extraction: the [C, ...] client stack and
+            # its smashed data live sharded over the batch axes
+            v.cohort_clients = constrain_cohort_tree(v.cohort_clients,
+                                                     ctx.mesh)
         v.server_prev = state.server.params
         v.feats = jax.vmap(ctx.task.client_forward)(v.cohort_clients.params,
                                                     v.xs)
+        v.feats = constrain_cohort(v.feats, ctx.mesh)
 
 
 def _pair_server_losses_and_grads(ctx, v):
@@ -177,15 +193,23 @@ class ServerUpdate(Phase):
 
     def __call__(self, ctx, v):
         if self.mode == "cycle":
-            store = FeatureStore.pool(jax.lax.stop_gradient(v.feats), v.ys,
-                                      mask=v.mask)
+            # the pooled feature dataset D_S^f stays sharded over the
+            # batch axes; the masked resample inside the inner loop is a
+            # sharded permutation-gather (feature_resample kernel on TPU)
+            store = constrain_store(
+                FeatureStore.pool(jax.lax.stop_gradient(v.feats), v.ys,
+                                  mask=v.mask), ctx.mesh)
             server, sloss = server_inner_loop(
                 ctx.task, v.state.server, ctx.opt_server, store, v.key,
-                ctx.cycle, batch=jax.tree.leaves(v.ys)[0].shape[1])
+                ctx.cycle, batch=jax.tree.leaves(v.ys)[0].shape[1],
+                mesh=ctx.mesh)
             v.metrics["server_loss"] = sloss
         elif self.mode == "replica_avg":
             losses, gs = _pair_server_losses_and_grads(ctx, v)
             rep = broadcast_entity(v.state.server, v.ys.shape[0])
+            if ctx.mesh is not None:
+                rep = constrain_cohort_tree(rep, ctx.mesh)
+                gs = constrain_cohort_tree(gs, ctx.mesh)
             rep = jax.vmap(lambda e, g: entity_step(e, g, ctx.opt_server))(
                 rep, gs)
             server = (entity_mean(rep) if v.mask is None
@@ -224,8 +248,9 @@ class FeatureGradients(Phase):
                else self.average)
         ccfg = (ctx.cycle if avg == ctx.cycle.avg_client_grads
                 else replace(ctx.cycle, avg_client_grads=avg))
-        v.fgrads = feature_gradients(ctx.task, params, v.feats, v.ys, ccfg,
-                                     mask=v.mask)
+        v.fgrads = constrain_cohort(
+            feature_gradients(ctx.task, params, v.feats, v.ys, ccfg,
+                              mask=v.mask), ctx.mesh)
         v.metrics.update(feat_grad_metrics(v.fgrads, mask=v.mask))
 
 
@@ -265,6 +290,11 @@ class ClientUpdate(Phase):
             v.cohort_clients, gnorms = client_updates(
                 ctx.task, v.cohort_clients, ctx.opt_client, v.xs, v.fgrads,
                 grad_clip=clip, mask=v.mask)
+            if ctx.mesh is not None:
+                # sharded VJPs: updated cohort entities stay cohort-sharded
+                # into the commit scatter/average
+                v.cohort_clients = constrain_cohort_tree(v.cohort_clients,
+                                                         ctx.mesh)
         if self.record_gnorm:
             v.metrics["client_grad_norm_mean"] = masked_mean(gnorms, v.mask)
 
@@ -390,6 +420,9 @@ class LocalFedAvgRound(Phase):
         n = v.ys.shape[0]
         servers = broadcast_entity(v.state.server, n)
         clients = broadcast_entity(v.state.client_global, n)
+        if ctx.mesh is not None:
+            servers = constrain_cohort_tree(servers, ctx.mesh)
+            clients = constrain_cohort_tree(clients, ctx.mesh)
 
         def one(se, ce, x, y):
             def loss_fn(c, s):
@@ -440,14 +473,28 @@ def init_train_state(key, n_clients: int, task: SplitTask,
 def build_algorithm(program: RoundProgram, task: SplitTask,
                     opt_server: Optimizer, opt_client: Optimizer,
                     cycle: CycleConfig = CycleConfig(),
-                    donate: bool = False) -> SLAlgorithm:
+                    donate: bool = False,
+                    mesh: Any = None,
+                    state_shardings: Any = None,
+                    shard_data: bool = True) -> SLAlgorithm:
     """Compile a RoundProgram into the uniform algorithm interface.
 
     ``donate=True`` donates the TrainState buffers to the jitted round
     (in-place on accelerators; skipped by the Engine on CPU where XLA
     cannot honor donation).
+
+    ``mesh`` + ``state_shardings`` switch on the mesh-native path:
+    phases thread ``with_sharding_constraint`` (cohort activations and
+    the pooled feature store over the batch axes, server minibatches
+    data-parallel), and the jitted round pins its output TrainState to
+    ``state_shardings`` — so round N+1's input sharding equals round N's
+    output sharding and the compile-once contract holds per
+    (algo, config, mesh).  ``shard_data=False`` keeps the weight
+    placement but drops the cohort/data constraints
+    (``ExperimentConfig.shard_cohort``).
     """
-    ctx = PhaseContext(task, opt_server, opt_client, cycle)
+    ctx = PhaseContext(task, opt_server, opt_client, cycle,
+                       mesh if shard_data else None)
     traces = {"count": 0}
 
     def init(key, n_clients: int) -> TrainState:
@@ -462,7 +509,17 @@ def build_algorithm(program: RoundProgram, task: SplitTask,
             phase(ctx, v)
         return v.state, v.metrics
 
-    round_fn = (jax.jit(round_impl, donate_argnums=(0,)) if donate
-                else jax.jit(round_impl))
+    jit_kwargs = {}
+    if donate:
+        jit_kwargs["donate_argnums"] = (0,)
+    if state_shardings is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        out_mesh = jax.tree.leaves(state_shardings)[0].mesh
+        # metrics are scalars -> replicated; the state sharding pin is
+        # what keeps round-over-round input shardings (and therefore the
+        # trace count) stable
+        jit_kwargs["out_shardings"] = (
+            state_shardings, NamedSharding(out_mesh, PartitionSpec()))
+    round_fn = jax.jit(round_impl, **jit_kwargs)
     return SLAlgorithm(program.name, init, round_fn,
                        program.uses_global_client, traces)

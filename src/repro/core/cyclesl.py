@@ -20,13 +20,14 @@ decoupled (both handled by the caller via ``CycleConfig``).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.feature_store import (FeatureStore, gather_batch,
-                                      masked_resample_plan, resample_plan)
+from repro.core.feature_store import (FeatureStore, constrain_store,
+                                      gather_batch, masked_resample_plan,
+                                      resample_plan)
 from repro.core.protocol import (EntityState, entity_step, masked_axis0_mean,
                                  select_entities)
 from repro.core.split import SplitTask
@@ -54,16 +55,16 @@ class CycleConfig:
     # global-norm clip applied to every server inner-loop step and every
     # client VJP step (None = no clipping)
     grad_clip: Optional[float] = None
-    # optional sharding hook applied to every resampled server batch
-    # (features, labels) — the launcher injects a with_sharding_constraint
-    # so the inner loop stays data-parallel on the pod (perf iteration 3,
-    # EXPERIMENTS.md §Perf); None = leave placement to GSPMD.
-    batch_constraint: Optional[Any] = None
+    # NOTE: the old ``batch_constraint`` callable hook is gone — server
+    # batch sharding now flows from the mesh itself (the serializable
+    # ``ExperimentConfig.mesh_shape`` knobs / the launcher's mesh) via
+    # ``sharding.specs.constrain_server_batch``, threaded through the
+    # ``mesh`` argument of :func:`server_inner_loop`.
 
 
 def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
                       store: FeatureStore, key, ccfg: CycleConfig,
-                      batch: int) -> tuple[EntityState, jnp.ndarray]:
+                      batch: int, mesh=None) -> tuple[EntityState, jnp.ndarray]:
     """E epochs of minibatch training on the resampled feature dataset.
 
     When the store carries a row-validity mask (padded cohort), the plan
@@ -73,6 +74,12 @@ def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
     is excluded from the mean) — so one compiled loop serves every live
     cohort size, with numerics identical to an unpadded pool of just the
     live rows.
+
+    ``mesh`` pins every resampled minibatch data-parallel over the batch
+    axes (:func:`repro.sharding.specs.constrain_server_batch`); the
+    gather itself dispatches to the ``feature_resample`` Pallas kernel
+    on TPU (see :func:`gather_batch`).  ``mesh=None`` leaves placement
+    to GSPMD — layout only, never values.
     """
     sb = min(ccfg.server_batch or batch, store.size)
     if store.valid is None:
@@ -89,8 +96,9 @@ def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
 
     def apply_step(entity, idx):
         f, y = gather_batch(store, idx)
-        if ccfg.batch_constraint is not None:
-            f, y = ccfg.batch_constraint(f, y)
+        if mesh is not None:
+            from repro.sharding.specs import constrain_server_batch
+            f, y = constrain_server_batch(f, y, mesh)
         loss, grads = jax.value_and_grad(task.server_loss)(entity.params, f, y)
         grads = _maybe_clip(grads, ccfg.grad_clip)
         return entity_step(entity, grads, opt_s), loss
@@ -181,23 +189,31 @@ def client_updates(task: SplitTask, clients: EntityState, opt_c: Optimizer,
 
 def cyclesl_round(task: SplitTask, server: EntityState,
                   clients: EntityState, opt_s: Optimizer, opt_c: Optimizer,
-                  xs, ys, key, ccfg: CycleConfig):
+                  xs, ys, key, ccfg: CycleConfig, mesh=None):
     """One full CycleSL round (Algorithm 1).
 
     xs, ys: cohort-stacked batches [C, b, ...].
     clients: cohort-stacked EntityState.
+    ``mesh`` shards the round end-to-end: cohort-stacked activations over
+    the batch axes, the pooled feature dataset over 'data', and every
+    resampled server minibatch data-parallel.
     Returns (server', clients', metrics).
     """
     # 1. parallel client feature extraction (smashed data)
     feats = jax.vmap(task.client_forward)(clients.params, xs)
+    if mesh is not None:
+        from repro.sharding.specs import constrain_cohort
+        feats = constrain_cohort(feats, mesh)
 
-    # 2. pool into the server-side global feature dataset (Eq. 3)
-    store = FeatureStore.pool(jax.lax.stop_gradient(feats), ys)
+    # 2. pool into the server-side global feature dataset (Eq. 3);
+    #    the pool stays sharded over the batch axes on the mesh
+    store = constrain_store(
+        FeatureStore.pool(jax.lax.stop_gradient(feats), ys), mesh)
 
     # 3. standalone server task: E epochs of resampled minibatches
     batch = jax.tree.leaves(ys)[0].shape[1]
     server, server_loss = server_inner_loop(
-        task, server, opt_s, store, key, ccfg, batch=batch)
+        task, server, opt_s, store, key, ccfg, batch=batch, mesh=mesh)
 
     # 4. frozen updated server -> feature gradients (Eq. 5)
     fgrads = feature_gradients(task, server.params, feats, ys, ccfg)

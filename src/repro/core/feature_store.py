@@ -96,6 +96,47 @@ def masked_resample_plan(key, valid, epochs: int,
     return plan, jnp.broadcast_to(step_ok, (epochs, steps))
 
 
-def gather_batch(store: FeatureStore, idx) -> tuple[jax.Array, jax.Array]:
-    return (jnp.take(store.features, idx, axis=0),
-            jax.tree.map(lambda l: jnp.take(l, idx, axis=0), store.labels))
+def gather_batch(store: FeatureStore, idx,
+                 use_kernel: Optional[bool] = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Resample one server minibatch: ``out[i] = store[idx[i]]``.
+
+    Backend-gated like ``fused_adam``: on TPU the row gather dispatches
+    to the ``kernels.ops.feature_resample`` scalar-prefetch Pallas
+    kernel (indices in SMEM, one source row-block streamed per output
+    row-block — a pure HBM-bandwidth copy); elsewhere the XLA
+    ``jnp.take`` lowering is kept (``use_kernel=True`` forces the kernel
+    in interpret mode, which is what the CPU equivalence test
+    exercises).  Both paths compute the identical gather.
+
+    Caveat: GSPMD has no partitioning rule for a bare ``pallas_call``,
+    so on a mesh with the pool sharded over 'data' XLA gathers the
+    operand around the kernel — correct, but the gather is not yet
+    shard-LOCAL.  Making it so needs a ``shard_map`` wrapper with
+    per-shard index translation (ROADMAP "Kernel depth"); the jnp path
+    partitions natively.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels import ops
+        take = lambda a: ops.resample_rows(a, idx)
+    else:
+        take = lambda a: jnp.take(a, idx, axis=0)
+    return take(store.features), jax.tree.map(take, store.labels)
+
+
+def constrain_store(store: FeatureStore, mesh) -> FeatureStore:
+    """Pin the pooled arrays' row dim to the mesh batch axes so D_S^f
+    stays sharded over 'data' through the server inner loop (the paper's
+    pooled feature dataset is the one [C*b, ...] tensor per round whose
+    placement GSPMD would otherwise replicate)."""
+    from repro.sharding.specs import constrain_cohort
+    if mesh is None:
+        return store
+    return store._replace(
+        features=constrain_cohort(store.features, mesh),
+        labels=jax.tree.map(lambda l: constrain_cohort(l, mesh),
+                            store.labels),
+        valid=(None if store.valid is None
+               else constrain_cohort(store.valid, mesh)))

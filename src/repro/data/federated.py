@@ -17,9 +17,14 @@ class ClientData:
     x_test: np.ndarray
     y_test: np.ndarray
 
+    def sample_indices(self, rng: np.random.Generator, batch: int):
+        """The one RNG draw behind a batch — exposed so a resumed run can
+        fast-forward the sampling stream without materializing arrays."""
+        return rng.choice(len(self.x_train), size=batch,
+                          replace=len(self.x_train) < batch)
+
     def sample_batch(self, rng: np.random.Generator, batch: int):
-        idx = rng.choice(len(self.x_train), size=batch,
-                         replace=len(self.x_train) < batch)
+        idx = self.sample_indices(rng, batch)
         return self.x_train[idx], self.y_train[idx]
 
 

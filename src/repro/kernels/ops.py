@@ -56,6 +56,18 @@ def feature_resample(src, idx):
     return _fr.feature_resample(src, idx, interpret=default_interpret())
 
 
+def resample_rows(src, idx):
+    """Row gather ``out[i] = src[idx[i]]`` for ANY trailing shape via the
+    ``feature_resample`` scalar-prefetch kernel (rows flattened to 2-D
+    and restored).  This is the entry point ``FeatureStore``'s resample
+    gather dispatches to on TPU (backend-gated like ``fused_adam``); it
+    deliberately stays un-jitted so it inlines into the caller's trace
+    and composes with GSPMD sharding of the pooled array."""
+    flat = src.reshape((src.shape[0], -1))
+    out = _fr.feature_resample(flat, idx, interpret=default_interpret())
+    return out.reshape((idx.shape[0],) + src.shape[1:])
+
+
 @partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "weight_decay"))
 def fused_adam(p, g, m, v, step, *, lr: float, b1: float = 0.9,
                b2: float = 0.999, eps: float = 1e-8,

@@ -31,6 +31,29 @@ def make_local_mesh():
     return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
 
 
+def make_engine_mesh(shape, axes):
+    """Mesh from the serializable ``ExperimentConfig.mesh_shape`` /
+    ``mesh_axes`` knobs, laid over the first prod(shape) devices.
+
+    Unlike the fixed production meshes above, this accepts any
+    shape/axes pair (Engine experiments sweep device counts via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
+    shape = tuple(int(s) for s in shape)
+    axes = tuple(axes)
+    if len(shape) != len(axes):
+        raise ValueError(f"mesh_shape {shape} and mesh_axes {axes} must "
+                         "have equal length")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
+            "jax initializes (see benchmarks/bench_round.py --devices)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
 def batch_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 

@@ -185,3 +185,85 @@ def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
         return P(*([None] * (1 + extra_dims)))
     lead = axes if len(axes) > 1 else axes[0]
     return P(lead, *([None] * extra_dims))
+
+
+# ------------------------------------------------------------------
+# Mesh-native round execution: the constraint points every RoundProgram
+# phase threads when the Engine runs on a mesh.  All of these are value-
+# neutral (with_sharding_constraint only pins layout), which is what
+# makes the 1-device-mesh path bit-for-bit equal to the unsharded one.
+def _wsc(x, mesh: Mesh, spec: P):
+    from jax.lax import with_sharding_constraint
+    try:
+        return with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except Exception:
+        if isinstance(x, jax.core.Tracer):
+            raise               # inside a trace a bad spec is a real bug
+        return x                # eager/abstract use: layout hint only
+
+
+def constrain_cohort(x, mesh: Optional[Mesh]):
+    """Constrain a [C, ...] cohort-stacked (or [T, ...] pooled-row) array:
+    leading dim over the batch axes, trailing dims replicated.  No-op when
+    the leading dim doesn't divide the batch axes (batch_spec guard)."""
+    if mesh is None or not hasattr(x, "ndim") or x.ndim < 1:
+        return x
+    return _wsc(x, mesh, batch_spec(mesh, x.shape[0], x.ndim - 1))
+
+
+def constrain_cohort_tree(tree, mesh: Optional[Mesh]):
+    """constrain_cohort over every leaf of a cohort-stacked pytree (the
+    [C, ...] EntityState stacks the phases carry)."""
+    if mesh is None:
+        return tree
+    return jax.tree.map(lambda l: constrain_cohort(l, mesh), tree)
+
+
+def constrain_server_batch(f, y, mesh: Optional[Mesh]):
+    """Keep the CycleSL server inner loop data-parallel on the mesh.
+
+    GSPMD propagates FSDP *weight* shardings into the resampled feature
+    batches (the 'data' axis lands on d_model and the batch dim silently
+    replicates — §Perf iteration 3); this pins the resampled (features,
+    labels) minibatch instead: rows over 'data', and for >=3-d
+    transformer features the model dim over 'model' (falling back to
+    sequence sharding when the server batch doesn't divide 'data').
+    Replaces the old un-serializable ``CycleConfig.batch_constraint``
+    callable hook.
+    """
+    if mesh is None:
+        return f, y
+    d_ax = shard_if_divisible(f.shape[0], "data", mesh)
+    m_ax = "model" if "model" in mesh.shape else None
+    if f.ndim >= 3:              # [sb, S, ..., d] transformer features
+        seq_ax = None if d_ax else shard_if_divisible(f.shape[1], "data",
+                                                      mesh)
+        dm_ax = shard_if_divisible(f.shape[-1], m_ax, mesh) if m_ax else None
+        f = _wsc(f, mesh, P(d_ax, seq_ax, *([None] * (f.ndim - 3)), dm_ax))
+    elif f.ndim == 2:
+        f = _wsc(f, mesh, P(d_ax, None))
+    y = jax.tree.map(
+        lambda l: _wsc(l, mesh, P(d_ax, *([None] * (l.ndim - 1)))), y)
+    return f, y
+
+
+def train_state_shardings(state, mesh: Mesh, moe_shard_mode: str = "expert",
+                          shard_cohort: bool = True):
+    """NamedSharding tree for a TrainState-like NamedTuple
+    ``(server, clients, client_global)``.
+
+    server / client_global — plain model entities, FSDP/TP per the path
+    rules (role 'server' / 'full'); clients — the persistent [N, ...]
+    per-client stack, leading cohort dim over the batch axes (role
+    'client') unless ``shard_cohort`` is off.  Works on concrete states
+    and on ``jax.eval_shape`` abstractions alike.
+    """
+    def _field(sub, role):
+        if sub is None:
+            return None
+        return named_shardings(sub, mesh, role, moe_shard_mode)
+
+    return type(state)(
+        _field(state.server, "server"),
+        _field(state.clients, "client" if shard_cohort else "full"),
+        _field(state.client_global, "full"))
