@@ -17,6 +17,10 @@ algorithm:
                           the steady-state baseline the padded path
                           must not regress against.
 * ``by_cohort_size``    — padded rounds/sec across capacities.
+* ``pipeline_comparison`` — (``--pipeline``) rounds/sec with the
+                          pipelined scheduler off vs sync-barrier vs
+                          async (one-round-stale overlap), per algorithm,
+                          with the trace-budget and staleness claims.
 * ``device_sweep``      — (``--devices 1,2,4,8``) rounds/sec of the
                           mesh-native sharded Engine vs device count.
                           Each count runs in a fresh subprocess with
@@ -30,7 +34,7 @@ trajectory (CI runs ``--smoke --devices 1,2,4`` and uploads the
 artifact).
 
   PYTHONPATH=src python benchmarks/bench_round.py [--smoke] [--out PATH]
-      [--devices 1,2,4,8]
+      [--devices 1,2,4,8] [--pipeline]
 """
 from __future__ import annotations
 
@@ -181,6 +185,62 @@ def bench_algo(algo: str, base: ExperimentConfig, rounds: int,
     return out
 
 
+# ----------------------------------------------------- pipeline sweep
+def pipeline_sweep(smoke: bool) -> dict:
+    """Rounds/sec with the pipelined scheduler off vs on (sync barrier
+    and async one-round-stale overlap), per algorithm — the evidence
+    behind the pipeline_depth knob.  Timing goes through the Engine's
+    own collect_timing path (device-synced per round, compile round
+    excluded), so what's measured is the schedule, not the harness."""
+    base = ExperimentConfig(
+        task="image", n_clients=24 if smoke else 60,
+        attendance=0.25 if smoke else 0.2, batch=8 if smoke else 16,
+        width=4 if smoke else 8, cut=2, seed=0, eval_every=10**9,
+        rounds=8 if smoke else 16, collect_timing=True)
+    modes = {"off": {"pipeline_depth": 0},
+             "sync": {"pipeline_depth": 1, "pipeline_staleness": "sync"},
+             "async": {"pipeline_depth": 1, "pipeline_staleness": "async"}}
+    out = {}
+    for algo in ALGOS:
+        rec = {}
+        for mode, kw in modes.items():
+            eng = _engine(replace(base, algo=algo, **kw))
+            res = eng.run()
+            entry = {
+                "steady_ms": round(res["round_time_s"] * 1e3, 3),
+                "rounds_per_sec": round(1.0 / res["round_time_s"], 2),
+            }
+            if mode != "off":
+                entry["extract_traces"] = eng.pipeline.extract_traces
+                entry["tail_traces"] = eng.pipeline.tail_traces
+                entry["max_theta_s_lag_rounds"] = \
+                    res["pipeline"]["max_theta_s_lag_rounds"]
+            else:
+                entry["compile_count"] = eng.algo.trace_count
+            rec[mode] = entry
+        rec["claims"] = {
+            # one extract + one tail trace — the "at most one warm-up
+            # trace over the sequential budget" acceptance
+            "pipeline_trace_budget":
+                rec["sync"]["extract_traces"] == 1
+                and rec["sync"]["tail_traces"] == 1,
+            "async_lag_bounded":
+                rec["async"]["max_theta_s_lag_rounds"] <= 1,
+            "sync_over_off":
+                round(rec["sync"]["steady_ms"]
+                      / rec["off"]["steady_ms"], 3),
+            "async_over_off":
+                round(rec["async"]["steady_ms"]
+                      / rec["off"]["steady_ms"], 3),
+        }
+        out[algo] = rec
+        print(f"[pipeline {algo}] off={rec['off']['steady_ms']}ms "
+              f"sync={rec['sync']['steady_ms']}ms "
+              f"async={rec['async']['steady_ms']}ms "
+              f"lag={rec['async']['max_theta_s_lag_rounds']}")
+    return out
+
+
 # ------------------------------------------------------- device sweep
 def sweep_worker(n_devices: int, smoke: bool) -> dict:
     """One sharded measurement at the CURRENT process's device count:
@@ -274,6 +334,9 @@ def main() -> dict:
                     help="comma-separated device counts for the sharded "
                          "Engine sweep, e.g. 1,2,4,8 (one subprocess per "
                          "count)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="also sweep the pipelined scheduler: rounds/sec "
+                         "with pipeline_depth off vs sync vs async")
     ap.add_argument("--sweep-worker", type=int, default=None,
                     help=argparse.SUPPRESS)     # internal: one sweep point
     args = ap.parse_args()
@@ -281,6 +344,8 @@ def main() -> dict:
         print(json.dumps(sweep_worker(args.sweep_worker, args.smoke)))
         return {}
     result = run(smoke=args.smoke)
+    if args.pipeline:
+        result["pipeline_comparison"] = pipeline_sweep(args.smoke)
     if args.devices:
         result["device_sweep"] = device_sweep(
             [int(x) for x in args.devices.split(",")], args.smoke)

@@ -13,9 +13,11 @@ from repro.api.config import ExperimentConfig
 from repro.api.engine import Engine, evaluate
 from repro.api.phases import (ClientUpdate, Commit, ExtractFeatures,
                               FeatureGradients, Phase, PhaseContext,
+                              PipelinedAlgorithm, PipelineStage,
                               RoundProgram, RoundVars, ServerUpdate,
                               SLAlgorithm, TrainState, build_algorithm,
-                              init_train_state)
+                              build_pipelined_algorithm, init_train_state,
+                              split_program)
 from repro.api.registry import (PROGRAMS, algorithm_names, get_program,
                                 register_program)
 from repro.api.tasks import TASKS, build_task, register_task, task_names
@@ -23,8 +25,10 @@ from repro.api.tasks import TASKS, build_task, register_task, task_names
 __all__ = [
     "ExperimentConfig", "Engine", "evaluate",
     "Phase", "PhaseContext", "RoundProgram", "RoundVars", "TrainState",
-    "SLAlgorithm", "ExtractFeatures", "ServerUpdate", "FeatureGradients",
-    "ClientUpdate", "Commit", "build_algorithm", "init_train_state",
+    "SLAlgorithm", "PipelinedAlgorithm", "PipelineStage",
+    "ExtractFeatures", "ServerUpdate", "FeatureGradients",
+    "ClientUpdate", "Commit", "build_algorithm",
+    "build_pipelined_algorithm", "split_program", "init_train_state",
     "PROGRAMS", "algorithm_names", "get_program", "register_program",
     "TASKS", "build_task", "register_task", "task_names",
 ]

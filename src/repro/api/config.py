@@ -57,6 +57,20 @@ class ExperimentConfig:
     # restores the TrainState and continues at the saved round, keeping
     # the eval/ckpt cadence and the cohort-sampling stream aligned
     resume: bool = False
+    # --- pipelined rounds ---
+    # 0 = classic sequential rounds (one monolithic jitted round);
+    # 1 = software pipeline over two in-flight cohorts: ExtractFeatures
+    # compiles as its own dispatch so cohort k+1's extraction can overlap
+    # cohort k's ServerUpdate/FeatureGradients/Commit tail
+    pipeline_depth: int = 0
+    # 'sync'  — barrier mode: extract(k+1) waits for Commit(k); bit-for-
+    #           bit identical to the sequential Engine (the equivalence
+    #           goldens in tests/test_pipeline.py pin this)
+    # 'async' — latency-hiding mode: extract(k+1) is dispatched from the
+    #           pre-tail state while ServerUpdate(k) occupies the model
+    #           axes; client params and the θ_S^t snapshot are stale by
+    #           EXACTLY one round, never more
+    pipeline_staleness: str = "sync"
     cycle: CycleConfig = field(default_factory=CycleConfig)
 
     # ---------------------------------------------------------- builders
@@ -100,6 +114,14 @@ class ExperimentConfig:
             if any(int(s) < 1 for s in self.mesh_shape):
                 raise ValueError(f"mesh_shape {self.mesh_shape} must be "
                                  "positive")
+        if self.pipeline_depth not in (0, 1):
+            raise ValueError(
+                f"pipeline_depth={self.pipeline_depth}: only 0 (sequential) "
+                "and 1 (two in-flight cohorts) are supported")
+        if self.pipeline_staleness not in ("sync", "async"):
+            raise ValueError(
+                f"pipeline_staleness={self.pipeline_staleness!r}: expected "
+                "'sync' or 'async'")
         return self
 
     # ------------------------------------------------------------- flags
@@ -141,6 +163,15 @@ class ExperimentConfig:
         ap.add_argument("--resume", action="store_true",
                         help="resume from the latest checkpoint in "
                              "--ckpt-dir")
+        ap.add_argument("--pipeline-depth", type=int, default=0,
+                        choices=(0, 1),
+                        help="1 = pipeline cohort k+1's feature extraction "
+                             "against cohort k's server inner loop")
+        ap.add_argument("--pipeline-staleness", default="sync",
+                        choices=("sync", "async"),
+                        help="sync = barrier mode (bit-for-bit the "
+                             "sequential Engine); async = one-round-stale "
+                             "extraction overlapped with the server phase")
         return ap
 
     @classmethod
@@ -159,6 +190,8 @@ class ExperimentConfig:
             mesh_axes=tuple(args.mesh_axes.split(",")),
             shard_cohort=not args.no_shard_cohort,
             resume=args.resume,
+            pipeline_depth=args.pipeline_depth,
+            pipeline_staleness=args.pipeline_staleness,
             cycle=CycleConfig(server_epochs=args.server_epochs,
                               server_batch=args.server_batch,
                               grad_clip=args.grad_clip),

@@ -24,6 +24,15 @@ bit the unsharded path (constraints pin layout, never values).
 ``cfg.resume`` restores the latest checkpoint under ``ckpt_dir`` and
 continues at the saved round with cadence and sampling stream aligned.
 
+Pipelined rounds: ``cfg.pipeline_depth=1`` runs a software pipeline
+over two in-flight cohorts — cohort k+1's ExtractFeatures dispatch
+(batch axes) against cohort k's ServerUpdate..Commit tail (model axes),
+with prefetched cohort sampling and a double-buffered
+:class:`~repro.api.phases.PipelineStage`.  ``pipeline_staleness='sync'``
+is bit-for-bit the sequential loop; ``'async'`` overlaps with exactly
+one round of client/θ_S^t staleness (see ARCHITECTURE.md "Pipelined
+execution" and tests/test_pipeline.py).
+
 Pluggable callbacks observe the loop without forking it::
 
     eng = Engine(ExperimentConfig(algo="cyclesfl", rounds=100))
@@ -43,7 +52,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.config import ExperimentConfig
-from repro.api.phases import (SLAlgorithm, TrainState, build_algorithm,
+from repro.api.phases import (PipelinedAlgorithm, SLAlgorithm, TrainState,
+                              build_algorithm, build_pipelined_algorithm,
                               init_train_state)
 from repro.api.registry import get_program
 from repro.api.tasks import build_task
@@ -185,6 +195,22 @@ class Engine:
             donate=donate, mesh=self.mesh,
             state_shardings=self.state_shardings,
             shard_data=cfg.shard_cohort)
+        # ---- pipelined rounds: compile the (extract, tail) dispatch
+        # pair so cohort k+1's feature extraction can be in flight while
+        # cohort k's server phase runs.  None for the fused sequential
+        # programs (nothing to overlap) — the run loop falls back to the
+        # monolithic round.  The TrainState is only donated into the
+        # tail in sync mode: async mode keeps the pre-tail state alive
+        # inside the next cohort's extract dispatch.
+        self.pipeline: Optional[PipelinedAlgorithm] = None
+        self.pipeline_stats: dict = {}
+        if cfg.pipeline_depth > 0:
+            self.pipeline = build_pipelined_algorithm(
+                program, task, opt_s, opt_c, cfg.cycle,
+                donate=donate,
+                donate_state=(cfg.pipeline_staleness == "sync"),
+                mesh=self.mesh, state_shardings=self.state_shardings,
+                shard_data=cfg.shard_cohort)
 
     # ------------------------------------------------------------ state
     def init_state(self) -> TrainState:
@@ -314,6 +340,21 @@ class Engine:
                  f"round {step}")
         return state, step
 
+    # --------------------------------------------------------- pipeline
+    def _extract(self, state, inputs):
+        """Dispatch the ExtractFeatures head for one cohort."""
+        cohort, xs, ys, mask = inputs
+        if mask is None:
+            return self.pipeline.extract(state, cohort, xs, ys)
+        return self.pipeline.extract(state, cohort, xs, ys, mask)
+
+    def _tail(self, state, inputs, stage, key):
+        """Dispatch the ServerUpdate..Commit tail consuming ``stage``."""
+        cohort, xs, ys, mask = inputs
+        if mask is None:
+            return self.pipeline.tail(state, cohort, xs, ys, key, stage)
+        return self.pipeline.tail(state, cohort, xs, ys, key, stage, mask)
+
     # -------------------------------------------------------------- run
     def run(self, state: Optional[TrainState] = None) -> dict:
         cfg = self.cfg
@@ -333,15 +374,51 @@ class Engine:
         history = []
         round_time, timed_rounds = 0.0, 0
         t0 = time.time()
+        # ---- pipeline prime: sample cohort ``start_round`` and put its
+        # extraction in flight (async dispatch — does not block the host).
+        # On resume the restored state re-primes the pipeline, so the
+        # first post-resume extract is fresh (lag 0), exactly like the
+        # uninterrupted run's warm-up round.
+        pipelined = self.pipeline is not None
+        stage, stage_src, inputs, max_lag = None, start_round, None, 0
+        if pipelined and start_round < cfg.rounds:
+            inputs = self.sample_round(rng)
+            stage = self._extract(state, inputs)
         for rnd in range(start_round, cfg.rounds):
-            cohort, xs, ys, mask = self.sample_round(rng)
-            t_round = time.time()
-            if mask is None:
-                state, metrics = self.algo.round(state, cohort, xs, ys,
-                                                 self.round_key(rnd))
+            if pipelined:
+                # prefetch cohort k+1's sampling while round k's compute
+                # is (or is about to be) on the devices
+                nxt_inputs = (self.sample_round(rng)
+                              if rnd + 1 < cfg.rounds else None)
+                t_round = time.time()
+                nxt = None
+                if nxt_inputs is not None \
+                        and cfg.pipeline_staleness == "async":
+                    # overlap: extract(k+1) from the PRE-tail state — it
+                    # shares no dependency with tail(k)'s outputs, so XLA
+                    # can run it on the batch axes while the server inner
+                    # loop occupies the model axes.  Clients and the
+                    # θ_S^t snapshot are stale by exactly one round.
+                    nxt = (self._extract(state, nxt_inputs), rnd)
+                max_lag = max(max_lag, rnd - stage_src)
+                state, metrics = self._tail(state, inputs, stage,
+                                            self.round_key(rnd))
+                if nxt_inputs is not None and nxt is None:
+                    # sync barrier: extract(k+1) reads the post-Commit
+                    # state — bit-for-bit the sequential schedule
+                    nxt = (self._extract(state, nxt_inputs), rnd + 1)
+                if nxt is not None:
+                    (stage, stage_src), inputs = nxt, nxt_inputs
             else:
-                state, metrics = self.algo.round(state, cohort, xs, ys,
-                                                 self.round_key(rnd), mask)
+                cohort, xs, ys, mask = self.sample_round(rng)
+                t_round = time.time()
+                if mask is None:
+                    state, metrics = self.algo.round(state, cohort, xs, ys,
+                                                     self.round_key(rnd))
+                else:
+                    state, metrics = self.algo.round(state, cohort, xs, ys,
+                                                     self.round_key(rnd),
+                                                     mask)
             if cfg.collect_timing:
                 jax.block_until_ready(metrics["server_loss"])
                 if rnd > start_round:             # skip the compile round
@@ -368,4 +445,15 @@ class Engine:
             result["resumed_from_round"] = start_round
         if cfg.collect_timing:
             result["round_time_s"] = round_time / max(1, timed_rounds)
+        if cfg.pipeline_depth > 0:
+            self.pipeline_stats = {
+                "active": pipelined if cfg.rounds > start_round else False,
+                "mode": cfg.pipeline_staleness,
+                "max_theta_s_lag_rounds": max_lag if pipelined else 0,
+                "extract_traces": (self.pipeline.extract_traces
+                                   if pipelined else 0),
+                "tail_traces": (self.pipeline.tail_traces
+                                if pipelined else 0),
+            }
+            result["pipeline"] = self.pipeline_stats
         return result

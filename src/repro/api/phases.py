@@ -31,14 +31,15 @@ import jax.numpy as jnp
 from repro.core.cyclesl import (CycleConfig, client_update_one,
                                 client_updates, feature_gradients,
                                 server_inner_loop)
-from repro.core.feature_store import FeatureStore, constrain_store
+from repro.core.feature_store import pool_store
 from repro.core.protocol import (EntityState, broadcast_entity, entity_mean,
                                  entity_step, init_entity, masked_axis0_mean,
                                  masked_entity_mean, put_entities,
                                  select_entities, take_entities)
 from repro.core.split import SplitTask
 from repro.optim import Optimizer
-from repro.sharding.specs import constrain_cohort, constrain_cohort_tree
+from repro.sharding.specs import (constrain_cohort, constrain_cohort_tree,
+                                  constrain_entity_params)
 
 
 class TrainState(NamedTuple):
@@ -112,6 +113,8 @@ class RoundVars:
     cohort_clients: Optional[EntityState] = None
     server_prev: Any = None           # θ_S^t params, pre-ServerUpdate
     feats: Any = None                 # [C, b, ...] smashed data
+    store: Any = None                 # prebuilt pooled D_S^f (pipelined
+                                      # extract handoff); None = pool inline
     fgrads: Any = None                # [C, b, ...] feature gradients
     metrics: dict = field(default_factory=dict)
 
@@ -195,10 +198,12 @@ class ServerUpdate(Phase):
         if self.mode == "cycle":
             # the pooled feature dataset D_S^f stays sharded over the
             # batch axes; the masked resample inside the inner loop is a
-            # sharded permutation-gather (feature_resample kernel on TPU)
-            store = constrain_store(
-                FeatureStore.pool(jax.lax.stop_gradient(v.feats), v.ys,
-                                  mask=v.mask), ctx.mesh)
+            # sharded permutation-gather (feature_resample kernel on TPU).
+            # A pipelined extract dispatch hands the finished pool over
+            # via v.store; both paths build it with the same pool_store.
+            store = (v.store if v.store is not None
+                     else pool_store(v.feats, v.ys, mask=v.mask,
+                                     mesh=ctx.mesh))
             server, sloss = server_inner_loop(
                 ctx.task, v.state.server, ctx.opt_server, store, v.key,
                 ctx.cycle, batch=jax.tree.leaves(v.ys)[0].shape[1],
@@ -523,3 +528,157 @@ def build_algorithm(program: RoundProgram, task: SplitTask,
     round_fn = jax.jit(round_impl, **jit_kwargs)
     return SLAlgorithm(program.name, init, round_fn,
                        program.uses_global_client, traces)
+
+
+# ------------------------------------------------------ pipelined rounds
+class PipelineStage(NamedTuple):
+    """Everything the Extract dispatch hands to the in-flight tail.
+
+    One stage per in-flight cohort: the selected client entities, the
+    θ_S^t snapshot (read by non-cycle ``FeatureGradients``), the smashed
+    data, and — for cycle programs — the already-pooled D_S^f so the
+    tail's server phase starts on the handoff without re-pooling.
+
+    ``clients`` is the [C, ...] gathered stack for per-client programs,
+    but the SINGLE shared θ_C entity for global-client programs: the
+    tail re-broadcasts it so the broadcast stays logical inside the
+    trace — materializing C identical copies at the dispatch boundary
+    perturbs conv-VJP bits, and the snapshot-in-stage semantics (async
+    staleness rides the stage, never the tail's state) are unchanged.
+    """
+    clients: Any                      # [C, ...] stack, or shared θ_C entity
+    server_prev: Any                  # θ_S^t params snapshot
+    feats: Any                        # [C, b, ...] smashed data
+    store: Any                        # pooled FeatureStore (cycle) or None
+
+
+@dataclass(frozen=True)
+class PipelinedAlgorithm:
+    """A RoundProgram compiled as TWO overlappable dispatches.
+
+    ``extract(state, cohort, xs, ys[, mask]) -> PipelineStage`` runs the
+    ExtractFeatures head on the cohort batch axes; ``tail(state, cohort,
+    xs, ys, key, stage[, mask]) -> (state, metrics)`` runs the
+    ServerUpdate/FeatureGradients/ClientUpdate/Commit remainder.  Their
+    composition with a barrier is the sequential round; dispatching
+    ``extract`` for cohort k+1 before ``tail`` of cohort k is the
+    software pipeline.  ``traces`` tracks both functions — the compile
+    contract is ONE trace each per (algo, config, mesh).
+    """
+    name: str
+    init: Callable[..., TrainState]
+    extract: Callable[..., PipelineStage]
+    tail: Callable[..., tuple[TrainState, dict]]
+    uses_global_client: bool
+    traces: Any = None
+
+    @property
+    def extract_traces(self) -> int:
+        return self.traces["extract"] if self.traces else 0
+
+    @property
+    def tail_traces(self) -> int:
+        return self.traces["tail"] if self.traces else 0
+
+    @property
+    def trace_count(self) -> int:
+        return self.extract_traces + self.tail_traces
+
+
+def split_program(program: RoundProgram
+                  ) -> Optional[tuple[Phase, tuple[Phase, ...]]]:
+    """(head, tail) when the program starts with ExtractFeatures; None
+    for the fused sequential programs (ssl/sflv2/fedavg interleave
+    client and server updates inside one scan — there is nothing to
+    overlap, and the Engine falls back to the monolithic round)."""
+    if program.phases and isinstance(program.phases[0], ExtractFeatures):
+        return program.phases[0], program.phases[1:]
+    return None
+
+
+def build_pipelined_algorithm(program: RoundProgram, task: SplitTask,
+                              opt_server: Optimizer, opt_client: Optimizer,
+                              cycle: CycleConfig = CycleConfig(),
+                              donate: bool = False,
+                              donate_state: bool = True,
+                              mesh: Any = None,
+                              state_shardings: Any = None,
+                              shard_data: bool = True
+                              ) -> Optional[PipelinedAlgorithm]:
+    """Compile a RoundProgram into the (extract, tail) dispatch pair.
+
+    The phases are the SAME objects the monolithic round runs — the
+    split only moves the jit boundary to the ExtractFeatures/ServerUpdate
+    seam (plus the D_S^f pooling, which rides the extract side via
+    ``pool_store``), so ``tail(state, ..., extract(state, ...))`` is
+    numerically the monolithic ``round``.  Returns None when the program
+    has no ExtractFeatures head to split on.
+
+    ``donate=True`` donates the stage buffers into the tail (they die
+    with the round); ``donate_state`` additionally donates the TrainState
+    — the Engine switches it off in async mode, where the pre-tail state
+    is still in flight inside the next cohort's extract dispatch.
+    """
+    split = split_program(program)
+    if split is None:
+        return None
+    head, tail_phases = split
+    ctx = PhaseContext(task, opt_server, opt_client, cycle,
+                       mesh if shard_data else None)
+    pools = any(getattr(p, "mode", None) == "cycle" for p in tail_phases)
+    traces = {"extract": 0, "tail": 0}
+
+    def init(key, n_clients: int) -> TrainState:
+        return init_train_state(key, n_clients, task, opt_server, opt_client,
+                                program.uses_global_client)
+
+    def extract_impl(state, cohort, xs, ys, mask=None):
+        traces["extract"] += 1        # executes at trace time only
+        v = RoundVars(state=state, cohort=cohort, xs=xs, ys=ys, key=None,
+                      mask=mask)
+        head(ctx, v)
+        store = (pool_store(v.feats, ys, mask=mask, mesh=ctx.mesh)
+                 if pools else None)
+        # θ_S^t keeps its FSDP/TP weight placement while the cohort
+        # tensors sit on the batch axes — the disjoint-axis layout that
+        # lets XLA overlap this dispatch with the server inner loop
+        server_prev = constrain_entity_params(v.server_prev, ctx.mesh)
+        # global-client programs hand over the un-broadcast θ_C snapshot
+        # (see PipelineStage); per-client programs the gathered stack
+        clients = (state.client_global if program.uses_global_client
+                   else v.cohort_clients)
+        return PipelineStage(clients, server_prev, v.feats, store)
+
+    def tail_impl(state, cohort, xs, ys, key, stage, mask=None):
+        traces["tail"] += 1           # executes at trace time only
+        cohort_clients = stage.clients
+        if program.uses_global_client:
+            # re-broadcast the snapshot INSIDE the trace so XLA keeps it
+            # logical — bit-identical to the monolithic round's lowering
+            cohort_clients = broadcast_entity(stage.clients,
+                                              jax.tree.leaves(ys)[0].shape[0])
+            if ctx.mesh is not None:
+                cohort_clients = constrain_cohort_tree(cohort_clients,
+                                                       ctx.mesh)
+        v = RoundVars(state=state, cohort=cohort, xs=xs, ys=ys, key=key,
+                      mask=mask, cohort_clients=cohort_clients,
+                      server_prev=stage.server_prev, feats=stage.feats,
+                      store=stage.store)
+        for phase in tail_phases:
+            phase(ctx, v)
+        return v.state, v.metrics
+
+    tail_kwargs = {}
+    if donate:
+        # the stage dies with the round it feeds; the state is donated
+        # only when the caller guarantees no other dispatch still reads it
+        tail_kwargs["donate_argnums"] = ((0, 5) if donate_state else (5,))
+    if state_shardings is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        out_mesh = jax.tree.leaves(state_shardings)[0].mesh
+        tail_kwargs["out_shardings"] = (
+            state_shardings, NamedSharding(out_mesh, PartitionSpec()))
+    return PipelinedAlgorithm(program.name, init,
+                              jax.jit(extract_impl),
+                              jax.jit(tail_impl, **tail_kwargs),
+                              program.uses_global_client, traces)

@@ -25,8 +25,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.feature_store import (FeatureStore, constrain_store,
-                                      gather_batch, masked_resample_plan,
+from repro.core.feature_store import (FeatureStore, gather_batch,
+                                      masked_resample_plan, pool_store,
                                       resample_plan)
 from repro.core.protocol import (EntityState, entity_step, masked_axis0_mean,
                                  select_entities)
@@ -187,6 +187,52 @@ def client_updates(task: SplitTask, clients: EntityState, opt_c: Optimizer,
     return new_clients, gnorms
 
 
+def cyclesl_extract(task: SplitTask, clients: EntityState, xs, ys,
+                    mesh=None) -> tuple[jnp.ndarray, FeatureStore]:
+    """Phases 1-2 of Algorithm 1 as a standalone dispatch: parallel
+    client feature extraction plus the pooled D_S^f handoff (Eq. 3).
+
+    This is the half of the round that lives on the cohort/batch axes —
+    the pipelined schedule dispatches it for cohort k+1 while cohort k's
+    :func:`cyclesl_tail` occupies the server/model axes.  Composing the
+    two inside one trace is exactly the monolithic :func:`cyclesl_round`.
+    Returns ``(feats, store)``.
+    """
+    feats = jax.vmap(task.client_forward)(clients.params, xs)
+    if mesh is not None:
+        from repro.sharding.specs import constrain_cohort
+        feats = constrain_cohort(feats, mesh)
+    return feats, pool_store(feats, ys, mesh=mesh)
+
+
+def cyclesl_tail(task: SplitTask, server: EntityState, clients: EntityState,
+                 opt_s: Optimizer, opt_c: Optimizer, xs, ys, key,
+                 ccfg: CycleConfig, feats, store: FeatureStore, mesh=None):
+    """Phases 3-5 of Algorithm 1, consuming an extract handoff: server
+    inner epochs on the pooled store, frozen-server feature gradients
+    (Eq. 5), and the client VJP steps.  Returns (server', clients',
+    metrics)."""
+    batch = jax.tree.leaves(ys)[0].shape[1]
+    server, server_loss = server_inner_loop(
+        task, server, opt_s, store, key, ccfg, batch=batch, mesh=mesh)
+
+    fgrads = feature_gradients(task, server.params, feats, ys, ccfg)
+    fg_flat = fgrads.reshape(fgrads.shape[0], -1).astype(jnp.float32)
+    per_sample_norm = jnp.linalg.norm(
+        fg_flat, axis=-1) / jnp.sqrt(fg_flat.shape[-1])
+
+    clients, client_gnorms = client_updates(task, clients, opt_c, xs, fgrads,
+                                            grad_clip=ccfg.grad_clip)
+
+    metrics = {
+        "server_loss": server_loss,
+        "feat_grad_norm_mean": jnp.mean(per_sample_norm),
+        "feat_grad_norm_std": jnp.std(per_sample_norm),
+        "client_grad_norm_mean": jnp.mean(client_gnorms),
+    }
+    return server, clients, metrics
+
+
 def cyclesl_round(task: SplitTask, server: EntityState,
                   clients: EntityState, opt_s: Optimizer, opt_c: Optimizer,
                   xs, ys, key, ccfg: CycleConfig, mesh=None):
@@ -198,37 +244,10 @@ def cyclesl_round(task: SplitTask, server: EntityState,
     the batch axes, the pooled feature dataset over 'data', and every
     resampled server minibatch data-parallel.
     Returns (server', clients', metrics).
+
+    Implemented as extract ∘ tail so the monolithic round and the
+    pipelined two-dispatch schedule share every op.
     """
-    # 1. parallel client feature extraction (smashed data)
-    feats = jax.vmap(task.client_forward)(clients.params, xs)
-    if mesh is not None:
-        from repro.sharding.specs import constrain_cohort
-        feats = constrain_cohort(feats, mesh)
-
-    # 2. pool into the server-side global feature dataset (Eq. 3);
-    #    the pool stays sharded over the batch axes on the mesh
-    store = constrain_store(
-        FeatureStore.pool(jax.lax.stop_gradient(feats), ys), mesh)
-
-    # 3. standalone server task: E epochs of resampled minibatches
-    batch = jax.tree.leaves(ys)[0].shape[1]
-    server, server_loss = server_inner_loop(
-        task, server, opt_s, store, key, ccfg, batch=batch, mesh=mesh)
-
-    # 4. frozen updated server -> feature gradients (Eq. 5)
-    fgrads = feature_gradients(task, server.params, feats, ys, ccfg)
-    fg_flat = fgrads.reshape(fgrads.shape[0], -1).astype(jnp.float32)
-    per_sample_norm = jnp.linalg.norm(
-        fg_flat, axis=-1) / jnp.sqrt(fg_flat.shape[-1])
-
-    # 5. client local updates through the VJP
-    clients, client_gnorms = client_updates(task, clients, opt_c, xs, fgrads,
-                                            grad_clip=ccfg.grad_clip)
-
-    metrics = {
-        "server_loss": server_loss,
-        "feat_grad_norm_mean": jnp.mean(per_sample_norm),
-        "feat_grad_norm_std": jnp.std(per_sample_norm),
-        "client_grad_norm_mean": jnp.mean(client_gnorms),
-    }
-    return server, clients, metrics
+    feats, store = cyclesl_extract(task, clients, xs, ys, mesh=mesh)
+    return cyclesl_tail(task, server, clients, opt_s, opt_c, xs, ys, key,
+                        ccfg, feats, store, mesh=mesh)

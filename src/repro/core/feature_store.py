@@ -126,6 +126,20 @@ def gather_batch(store: FeatureStore, idx,
     return take(store.features), jax.tree.map(take, store.labels)
 
 
+def pool_store(feats, ys, mask=None, mesh=None) -> FeatureStore:
+    """Build the pooled, placement-pinned D_S^f handoff for one cohort.
+
+    The single construction point both execution schedules share: the
+    monolithic round pools inside ``ServerUpdate``, while the pipelined
+    extract dispatch pools here and hands the finished store to the
+    in-flight tail (``PipelineStage.store``) — identical ops either way
+    (stop_gradient + reshape + the broadcast validity mask), which is
+    what keeps the pipelined round bit-for-bit the sequential one.
+    """
+    return constrain_store(
+        FeatureStore.pool(jax.lax.stop_gradient(feats), ys, mask=mask), mesh)
+
+
 def constrain_store(store: FeatureStore, mesh) -> FeatureStore:
     """Pin the pooled arrays' row dim to the mesh batch axes so D_S^f
     stays sharded over 'data' through the server inner loop (the paper's

@@ -29,12 +29,18 @@ def serve_decoder_only(cfg, batch: int, prompt_len: int, steps: int,
     state = Transformer.init_decode_state(cfg, batch, prompt_len + steps)
 
     decode = jax.jit(lambda p, t, s: Transformer.decode_step(p, cfg, t, s))
-    # prefill by stepping the prompt (cache-exact, CPU-friendly)
-    tok = prompt[:, :1]
+    # prefill by stepping the prompt through the SAME jitted step the
+    # decode loop uses (cache-exact, CPU-friendly): one trace total, so
+    # prefill_s measures the model, not per-token retrace overhead
+    tok = jnp.zeros((batch, 1), jnp.int32)
     t0 = time.time()
     for i in range(prompt_len):
-        logits, state = Transformer.decode_step(params, cfg, prompt[:, i:i+1],
-                                                state)
+        logits, state = decode(params, prompt[:, i:i+1], state)
+    if prompt_len:
+        jax.block_until_ready(logits)
+        # greedy continuation: generation starts from the token the
+        # prefilled prompt predicts, not a replay of the prompt's start
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     t_prefill = time.time() - t0
     out_tokens = []
     t0 = time.time()

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, InputShape
-from repro.core.cyclesl import CycleConfig, cyclesl_round
+from repro.core.cyclesl import (CycleConfig, cyclesl_extract, cyclesl_round,
+                                cyclesl_tail)
 from repro.core.protocol import EntityState, init_entity
 from repro.core.split import SplitTask, make_transformer_task, xent_loss, xent_metrics
 from repro.launch import inputs as inputs_lib
@@ -67,6 +68,13 @@ def _batch_leading_spec(mesh, leaf_shape, extra: int):
     return P(lead, *([None] * extra))
 
 
+def _batch_lead(mesh):
+    """Leaf -> NamedSharding with the leading dim on the batch axes —
+    the one shard rule every cohort/stage/input tensor uses."""
+    return lambda l: NamedSharding(
+        mesh, _batch_leading_spec(mesh, l.shape, len(l.shape) - 1))
+
+
 # ------------------------------------------------------------ whisper task
 def make_whisper_task(cfg: ArchConfig) -> SplitTask:
     """Whisper SplitTask: encoder = client, decoder = server."""
@@ -99,13 +107,55 @@ def make_whisper_task(cfg: ArchConfig) -> SplitTask:
 
 
 # ------------------------------------------------------------- train step
-def build_train_step(cfg: ArchConfig, mesh, shape: InputShape,
-                     cycle: CycleConfig = CycleConfig()) -> StepBundle:
+@dataclass
+class _TrainSubstrate:
+    """Task, optimizers, abstract train state/batches and their
+    shardings — the construction shared by the monolithic and pipelined
+    train-step builders (one source, so they cannot drift)."""
+    task: SplitTask
+    opt_s: Any
+    opt_c: Any
+    a_server: Any
+    a_clients: Any
+    xs: Any
+    ys: Any
+    a_key: Any
+    s_server: Any
+    s_clients: Any
+    s_xs: Any
+    s_ys: Any
+    s_key: Any
+
+
+def _train_substrate(cfg: ArchConfig, mesh, shape: InputShape
+                     ) -> _TrainSubstrate:
     cohort = cohort_size(mesh)
     task = (make_whisper_task(cfg) if cfg.family == "audio"
             else make_transformer_task(cfg))
-    opt_s = adam(3e-4)
-    opt_c = adam(3e-4)
+    opt_s, opt_c = adam(3e-4), adam(3e-4)
+    a_server = jax.eval_shape(
+        lambda: init_entity(task.init_server(jax.random.PRNGKey(0)), opt_s))
+    a_client1 = jax.eval_shape(
+        lambda: init_entity(task.init_client(jax.random.PRNGKey(0)), opt_c))
+    a_clients = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((cohort,) + l.shape, l.dtype),
+        a_client1)
+    xs, ys = inputs_lib.train_batch_specs(cfg, shape, cohort)
+    a_key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    moe_mode = cfg.moe.shard_mode if cfg.moe else "expert"
+    s_server = _ns(mesh, param_specs(a_server, mesh, "server", moe_mode))
+    s_clients = _ns(mesh, param_specs(a_clients, mesh, "client", moe_mode))
+    s_xs = jax.tree.map(_batch_lead(mesh), xs)
+    s_ys = jax.tree.map(_batch_lead(mesh), ys)
+    return _TrainSubstrate(task, opt_s, opt_c, a_server, a_clients, xs, ys,
+                           a_key, s_server, s_clients, s_xs, s_ys,
+                           NamedSharding(mesh, P()))
+
+
+def build_train_step(cfg: ArchConfig, mesh, shape: InputShape,
+                     cycle: CycleConfig = CycleConfig()) -> StepBundle:
+    sub = _train_substrate(cfg, mesh, shape)
+    task, opt_s, opt_c = sub.task, sub.opt_s, sub.opt_c
 
     # the resampled server minibatches stay data-parallel on the pod via
     # sharding.specs.constrain_server_batch (perf iteration 3), threaded
@@ -115,35 +165,60 @@ def build_train_step(cfg: ArchConfig, mesh, shape: InputShape,
         return cyclesl_round(task, server, clients, opt_s, opt_c,
                              xs, ys, key, cycle, mesh=mesh)
 
-    # ---- abstract state ----
-    a_server = jax.eval_shape(
-        lambda: init_entity(task.init_server(jax.random.PRNGKey(0)), opt_s))
-    a_client1 = jax.eval_shape(
-        lambda: init_entity(task.init_client(jax.random.PRNGKey(0)), opt_c))
-    a_clients = jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct((cohort,) + l.shape, l.dtype), a_client1)
-    xs, ys = inputs_lib.train_batch_specs(cfg, shape, cohort)
-    a_key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
-
-    # ---- shardings ----
-    moe_mode = cfg.moe.shard_mode if cfg.moe else "expert"
-    s_server = _ns(mesh, param_specs(a_server, mesh, "server", moe_mode))
-    s_clients = _ns(mesh, param_specs(a_clients, mesh, "client", moe_mode))
-    s_xs = jax.tree.map(
-        lambda l: NamedSharding(mesh, _batch_leading_spec(mesh, l.shape,
-                                                          len(l.shape) - 1)), xs)
-    s_ys = jax.tree.map(
-        lambda l: NamedSharding(mesh, _batch_leading_spec(mesh, l.shape,
-                                                          len(l.shape) - 1)), ys)
-    s_key = NamedSharding(mesh, P())
-
-    a_metrics = jax.eval_shape(train_step, a_server, a_clients, xs, ys, a_key)[2]
-    out_shardings = (s_server, s_clients, _replicated(mesh, a_metrics))
+    a_metrics = jax.eval_shape(train_step, sub.a_server, sub.a_clients,
+                               sub.xs, sub.ys, sub.a_key)[2]
+    out_shardings = (sub.s_server, sub.s_clients, _replicated(mesh, a_metrics))
     return StepBundle(
         "train", train_step,
-        (a_server, a_clients, xs, ys, a_key),
-        (s_server, s_clients, s_xs, s_ys, s_key),
+        (sub.a_server, sub.a_clients, sub.xs, sub.ys, sub.a_key),
+        (sub.s_server, sub.s_clients, sub.s_xs, sub.s_ys, sub.s_key),
         out_shardings, donate=(0, 1))
+
+
+def build_pipelined_train_steps(cfg: ArchConfig, mesh, shape: InputShape,
+                                cycle: CycleConfig = CycleConfig()
+                                ) -> tuple[StepBundle, StepBundle]:
+    """The CycleSL round as TWO overlappable dispatches (train_extract,
+    train_tail) — the launcher-side mirror of the Engine's pipelined
+    schedule: extraction for cohort k+1 is lowered against the batch
+    axes only, the tail against the server weight axes plus the stage
+    handoff, so the compiler can run them concurrently.
+
+    ``train_extract(clients, xs, ys) -> (feats, store)`` and
+    ``train_tail(server, clients, xs, ys, key, feats, store)`` compose
+    to exactly :func:`build_train_step`'s monolithic round.
+    """
+    sub = _train_substrate(cfg, mesh, shape)
+    task, opt_s, opt_c = sub.task, sub.opt_s, sub.opt_c
+
+    def extract_step(clients, xs, ys):
+        return cyclesl_extract(task, clients, xs, ys, mesh=mesh)
+
+    def tail_step(server, clients, xs, ys, key, feats, store):
+        return cyclesl_tail(task, server, clients, opt_s, opt_c, xs, ys,
+                            key, cycle, feats, store, mesh=mesh)
+
+    a_feats, a_store = jax.eval_shape(extract_step, sub.a_clients, sub.xs,
+                                      sub.ys)
+    # stage tensors are batch-leading (feats cohort dim, store rows)
+    s_feats = jax.tree.map(_batch_lead(mesh), a_feats)
+    s_store = jax.tree.map(_batch_lead(mesh), a_store)
+
+    extract_bundle = StepBundle(
+        "train_extract", extract_step, (sub.a_clients, sub.xs, sub.ys),
+        (sub.s_clients, sub.s_xs, sub.s_ys), (s_feats, s_store))
+    a_metrics = jax.eval_shape(tail_step, sub.a_server, sub.a_clients,
+                               sub.xs, sub.ys, sub.a_key, a_feats,
+                               a_store)[2]
+    tail_bundle = StepBundle(
+        "train_tail", tail_step,
+        (sub.a_server, sub.a_clients, sub.xs, sub.ys, sub.a_key, a_feats,
+         a_store),
+        (sub.s_server, sub.s_clients, sub.s_xs, sub.s_ys, sub.s_key,
+         s_feats, s_store),
+        (sub.s_server, sub.s_clients, _replicated(mesh, a_metrics)),
+        donate=(0, 1, 5, 6))          # state + the consumed stage buffers
+    return extract_bundle, tail_bundle
 
 
 # ----------------------------------------------------------- prefill step

@@ -219,6 +219,22 @@ def constrain_cohort_tree(tree, mesh: Optional[Mesh]):
     return jax.tree.map(lambda l: constrain_cohort(l, mesh), tree)
 
 
+def constrain_entity_params(params, mesh: Optional[Mesh], role: str = "server"):
+    """Pin a params pytree to its path-rule weight placement (FSDP/TP).
+
+    The pipelined Engine threads this through the extract dispatch's
+    θ_S^t snapshot: the snapshot stays on the model/weight axes while
+    every other stage tensor sits on the batch axes — disjoint axis
+    placement, so XLA can run cohort k+1's extraction concurrently with
+    cohort k's server inner loop instead of serializing them on a shared
+    axis.  Value-neutral (layout only); no-op off-mesh.
+    """
+    if mesh is None or params is None:
+        return params
+    specs = param_specs(params, mesh, role)
+    return jax.tree.map(lambda l, s: _wsc(l, mesh, s), params, specs)
+
+
 def constrain_server_batch(f, y, mesh: Optional[Mesh]):
     """Keep the CycleSL server inner loop data-parallel on the mesh.
 

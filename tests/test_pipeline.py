@@ -1,0 +1,385 @@
+"""Pipelined rounds: the equivalence suite that locks the scheduler down.
+
+The tentpole contract (ISSUE 4): restructuring RoundProgram execution
+into a software pipeline over two in-flight cohorts must not change a
+single bit where the schedules are required to agree:
+
+1. **Sync barrier == sequential, bit-for-bit.**  ``pipeline_depth=1``
+   with ``pipeline_staleness='sync'`` reproduces the sequential Engine
+   exactly — per-round TrainState and metrics — for ALL 10 registered
+   algorithms (fused programs fall back to the monolithic round and are
+   trivially covered; the split programs are the real test).
+2. **Trace budget.**  One extract trace + one tail trace per (algo,
+   config, mesh) across varying live cohort sizes — the sequential
+   budget (one round trace) plus at most one pipeline warm-up trace.
+3. **Bounded staleness.**  Async mode's θ_S/client lag is EXACTLY one
+   round, never more: the Engine's schedule is pinned against a manual
+   re-execution of the one-round-stale recurrence.
+4. **Resume.**  A resumed ``pipeline_depth=1`` run is bit-for-bit the
+   uninterrupted pipelined run (the pipeline re-primes from the
+   restored state).
+"""
+import json
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (Engine, ExperimentConfig, PROGRAMS, build_algorithm,
+                       build_pipelined_algorithm, get_program, split_program)
+from repro.core.cyclesl import CycleConfig, cyclesl_extract, cyclesl_round, \
+    cyclesl_tail
+from repro.core.protocol import init_entity, broadcast_entity
+from repro.launch.meshcheck import C, _masks, _task_and_data
+from repro.optim import adam
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # the same task/data protocol the meshcheck and padded goldens use
+    return _task_and_data()
+
+
+class Rec:
+    def __init__(self):
+        self.rows, self.state = [], None
+
+    def on_round(self, engine, rnd, state, metrics):
+        self.rows.append({k: np.asarray(v) for k, v in metrics.items()})
+        self.state = state
+
+
+def _assert_equal(a_state, a_rows, b_state, b_rows, msg):
+    for i, (ra, rb) in enumerate(zip(a_rows, b_rows)):
+        for k in ra:
+            np.testing.assert_array_equal(
+                ra[k], rb[k], err_msg=f"{msg}: round {i} metric {k}")
+    for la, lb in zip(jax.tree.leaves(a_state), jax.tree.leaves(b_state)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=f"{msg}: state")
+
+
+def _cfg(algo, **kw):
+    base = dict(algo=algo, task="image", rounds=4, n_clients=8,
+                attendance=0.5, batch=4, width=4, eval_every=4, seed=0)
+    base.update(kw)
+    return ExperimentConfig(**base)
+
+
+def _run(cfg):
+    rec = Rec()
+    res = Engine(cfg, callbacks=(rec,), log=lambda *a, **k: None).run()
+    return rec, res
+
+
+# --------------------------------------------------- per-algorithm goldens
+@pytest.mark.parametrize("name", sorted(PROGRAMS))
+def test_pipelined_sync_engine_is_bit_for_bit_sequential(name):
+    """The tentpole golden: the full pipelined Engine path (split
+    dispatches, prefetched sampling, double-buffered stage) in sync
+    barrier mode equals the sequential Engine exactly, per round, for
+    every registered algorithm."""
+    r_seq, _ = _run(_cfg(name))
+    r_pipe, res = _run(_cfg(name, pipeline_depth=1))
+    _assert_equal(r_seq.state, r_seq.rows, r_pipe.state, r_pipe.rows, name)
+    split = split_program(get_program(name)) is not None
+    assert res["pipeline"]["active"] == split, (
+        f"{name}: fused programs must fall back to the monolithic round")
+
+
+@pytest.mark.parametrize("name", sorted(n for n in PROGRAMS
+                                        if split_program(get_program(n))))
+def test_split_round_matches_monolithic_bit_for_bit(name, setup):
+    """Algorithm-level golden under padding: extract ∘ tail equals the
+    monolithic jitted round exactly, across rounds with varying live
+    cohort sizes (the masked compile-once stream)."""
+    task, xs, ys = setup
+    opt = adam(5e-3)
+    ccfg = CycleConfig(server_epochs=2)
+    algo = build_algorithm(get_program(name), task, opt, opt, ccfg)
+    pipe = build_pipelined_algorithm(get_program(name), task, opt, opt, ccfg)
+    s_mono = algo.init(jax.random.PRNGKey(0), n_clients=C)
+    s_pipe = algo.init(jax.random.PRNGKey(0), n_clients=C)
+    cohort = jnp.arange(C)
+    for r, mask in enumerate(_masks()):
+        key = jax.random.PRNGKey(r)
+        s_mono, m_mono = algo.round(s_mono, cohort, xs, ys, key, mask)
+        stage = pipe.extract(s_pipe, cohort, xs, ys, mask)
+        s_pipe, m_pipe = pipe.tail(s_pipe, cohort, xs, ys, key, stage, mask)
+        for k in m_mono:
+            np.testing.assert_array_equal(
+                np.asarray(m_mono[k]), np.asarray(m_pipe[k]),
+                err_msg=f"{name} round {r}: metric {k}")
+    for la, lb in zip(jax.tree.leaves(s_mono), jax.tree.leaves(s_pipe)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=f"{name}: state")
+
+
+def test_fused_programs_have_no_split():
+    for name in ("ssl", "sflv2", "fedavg"):
+        assert split_program(get_program(name)) is None
+        assert build_pipelined_algorithm(get_program(name), *([None] * 3)) \
+            is None
+
+
+# --------------------------------------------------------- trace budget
+@pytest.mark.parametrize("name", ["cyclesfl", "psl"])
+def test_pipelined_trace_budget_across_varying_cohorts(name):
+    """Compile pin: ONE extract trace + ONE tail trace for the whole
+    experiment no matter how live attendance varies — the sequential
+    round budget plus at most one pipeline warm-up trace."""
+    cfg = _cfg(name, rounds=6, n_clients=24, attendance=0.25,
+               variable_attendance=True, pipeline_depth=1)
+    eng = Engine(cfg, log=lambda *a, **k: None)
+    eng.run()
+    assert eng.pipeline.extract_traces == 1, (
+        f"{name}: extract traced {eng.pipeline.extract_traces} times")
+    assert eng.pipeline.tail_traces == 1, (
+        f"{name}: tail traced {eng.pipeline.tail_traces} times")
+    assert eng.algo.trace_count == 0, (
+        f"{name}: the monolithic round must not trace on the pipelined path")
+
+
+# ------------------------------------------------------------- staleness
+def test_async_theta_s_lag_never_exceeds_one_round():
+    """The staleness contract: in async mode every consumed stage was
+    extracted from the immediately preceding round's state — lag is
+    exactly one round after warm-up, never more."""
+    for name in ("cyclesfl", "psl"):
+        _, res = _run(_cfg(name, pipeline_depth=1,
+                           pipeline_staleness="async"))
+        assert res["pipeline"]["max_theta_s_lag_rounds"] == 1, name
+    # sync barrier mode has no staleness at all
+    _, res = _run(_cfg("cyclesfl", pipeline_depth=1))
+    assert res["pipeline"]["max_theta_s_lag_rounds"] == 0
+
+
+def test_async_engine_matches_manual_one_round_stale_schedule():
+    """Pin the async schedule itself: re-execute the one-round-stale
+    recurrence by hand — stage(k+1) extracted from the PRE-tail state of
+    round k — and require the Engine's async run to match bit-for-bit.
+    (If the Engine ever consumed a stage older than one round, or a
+    fresh one, this diverges.)"""
+    cfg = _cfg("cyclesfl", pipeline_depth=1, pipeline_staleness="async")
+    r_async, _ = _run(cfg)
+
+    eng = Engine(cfg, log=lambda *a, **k: None)
+    state = eng.init_state()
+    rng = np.random.default_rng(cfg.seed + 1)
+    inputs = eng.sample_round(rng)
+    stage = eng._extract(state, inputs)            # warm-up: lag 0
+    rows, final = [], None
+    for rnd in range(cfg.rounds):
+        nxt_inputs = (eng.sample_round(rng)
+                      if rnd + 1 < cfg.rounds else None)
+        nxt = (eng._extract(state, nxt_inputs)     # pre-tail state: lag 1
+               if nxt_inputs is not None else None)
+        state, metrics = eng._tail(state, inputs, stage, eng.round_key(rnd))
+        rows.append({k: np.asarray(v) for k, v in metrics.items()})
+        stage, inputs = nxt, nxt_inputs
+    _assert_equal(r_async.state, r_async.rows, state, rows, "async schedule")
+
+
+def test_async_equals_sync_when_staleness_cannot_bind(setup):
+    """With per-client commits and non-overlapping consecutive cohorts,
+    one-round-stale client reads touch clients no previous round wrote,
+    and the cycle family never reads the θ_S^t snapshot — so async and
+    sync must agree bit-for-bit.  A behavioural proof that staleness
+    enters ONLY through the one-round window."""
+    task, xs, ys = setup
+    opt = adam(5e-3)
+    ccfg = CycleConfig(server_epochs=2)
+    pipe = build_pipelined_algorithm(get_program("cyclepsl"), task, opt, opt,
+                                    ccfg)
+    half = C // 2
+    cohorts = [jnp.arange(half), jnp.arange(half, C)]   # disjoint
+    mask = jnp.ones(half, jnp.float32)
+
+    def drive(async_mode):
+        state = pipe.init(jax.random.PRNGKey(0), n_clients=C)
+        ins = [(cohorts[r % 2], xs[:half] if r % 2 == 0 else xs[half:],
+                ys[:half] if r % 2 == 0 else ys[half:]) for r in range(4)]
+        stage = pipe.extract(state, *ins[0], mask)
+        for rnd in range(4):
+            nxt = None
+            if rnd + 1 < 4 and async_mode:
+                # pre-tail state: the async one-round-stale read
+                nxt = pipe.extract(state, *ins[rnd + 1], mask)
+            state, _ = pipe.tail(state, *ins[rnd], jax.random.PRNGKey(rnd),
+                                 stage, mask)
+            if rnd + 1 < 4 and nxt is None:
+                nxt = pipe.extract(state, *ins[rnd + 1], mask)
+            stage = nxt
+        return state
+
+    s_sync, s_async = drive(False), drive(True)
+    for la, lb in zip(jax.tree.leaves(s_sync), jax.tree.leaves(s_async)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_async_differs_from_sync_when_cohorts_overlap():
+    """Sanity that the async mode is genuinely overlapped (not secretly
+    running the barrier): with a shared global client model, one-round
+    staleness must change the numbers."""
+    r_sync, _ = _run(_cfg("cyclesfl", pipeline_depth=1))
+    r_async, _ = _run(_cfg("cyclesfl", pipeline_depth=1,
+                           pipeline_staleness="async"))
+    same = all(
+        np.array_equal(np.asarray(la), np.asarray(lb))
+        for la, lb in zip(jax.tree.leaves(r_sync.state),
+                          jax.tree.leaves(r_async.state)))
+    assert not same, "async run is bit-identical to sync — no overlap?"
+
+
+# ---------------------------------------------------------------- resume
+def test_pipelined_resume_matches_uninterrupted_pipelined_run(tmp_path):
+    """Satellite golden: ExperimentConfig.resume of a pipeline_depth=1
+    run is bit-for-bit the uninterrupted pipelined run — state, eval
+    history tail, and cohort stream all aligned."""
+    base = _cfg("cyclesfl", rounds=6, eval_every=2, pipeline_depth=1)
+    ra = Rec()
+    full = Engine(replace(base, ckpt_dir=str(tmp_path / "a")),
+                  callbacks=(ra,), log=lambda *a, **k: None).run()
+    dir_b = str(tmp_path / "b")
+    Engine(replace(base, rounds=4, ckpt_dir=dir_b),
+           log=lambda *a, **k: None).run()
+    rb = Rec()
+    resumed = Engine(replace(base, ckpt_dir=dir_b, resume=True),
+                     callbacks=(rb,), log=lambda *a, **k: None).run()
+    assert resumed["resumed_from_round"] == 4
+    for la, lb in zip(jax.tree.leaves(ra.state), jax.tree.leaves(rb.state)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    tail = [h for h in full["history"] if h["round"] > 4]
+    assert [h["round"] for h in resumed["history"]] == \
+        [h["round"] for h in tail]
+    for got, want in zip(resumed["history"], tail):
+        assert got["test_loss"] == want["test_loss"]
+
+
+def test_async_resume_reprimes_and_stays_bounded(tmp_path):
+    """Async resume re-primes the pipeline from the restored state (the
+    first post-resume extract is fresh, like the warm-up round); the lag
+    bound still holds and the run completes."""
+    base = _cfg("cyclesfl", rounds=6, eval_every=2, pipeline_depth=1,
+                pipeline_staleness="async", ckpt_dir=str(tmp_path / "c"))
+    Engine(replace(base, rounds=4), log=lambda *a, **k: None).run()
+    res = Engine(replace(base, resume=True), log=lambda *a, **k: None).run()
+    assert res["resumed_from_round"] == 4
+    assert res["pipeline"]["max_theta_s_lag_rounds"] <= 1
+
+
+# ------------------------------------------------------------------ mesh
+def test_pipelined_engine_on_mesh_matches_sequential():
+    """The pipelined mesh path (placed state, committed inputs, pinned
+    tail out_shardings, disjoint-axis stage) on a 1-device mesh is
+    bit-for-bit the sequential unsharded Engine."""
+    r_seq, _ = _run(_cfg("cyclesfl", rounds=3, eval_every=3))
+    cfg = _cfg("cyclesfl", rounds=3, eval_every=3, mesh_shape=(1, 1),
+               pipeline_depth=1)
+    rec = Rec()
+    eng = Engine(cfg, callbacks=(rec,), log=lambda *a, **k: None)
+    eng.run()
+    assert eng.mesh is not None and eng.pipeline is not None
+    _assert_equal(r_seq.state, r_seq.rows, rec.state, rec.rows,
+                  "pipelined mesh")
+    assert eng.pipeline.extract_traces == 1
+    assert eng.pipeline.tail_traces == 1
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8 (the CI devices8-pipeline leg)")
+def test_pipelined_engine_on_8_device_mesh():
+    """The CI devices8-pipeline leg: the pipelined Engine on a real
+    multi-device host mesh agrees with the sequential unsharded Engine
+    to cross-device reduction noise, with the trace budget intact."""
+    r_seq, _ = _run(_cfg("cyclesfl", rounds=3, eval_every=3))
+    cfg = _cfg("cyclesfl", rounds=3, eval_every=3, mesh_shape=(8, 1),
+               pipeline_depth=1)
+    rec = Rec()
+    eng = Engine(cfg, callbacks=(rec,), log=lambda *a, **k: None)
+    eng.run()
+    assert eng.pipeline.extract_traces == 1
+    assert eng.pipeline.tail_traces == 1
+    for la, lb in zip(jax.tree.leaves(r_seq.state),
+                      jax.tree.leaves(rec.state)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=2e-5, atol=1e-6)
+
+
+# ------------------------------------------------------- launcher bundles
+def test_cyclesl_extract_tail_compose_to_round(setup):
+    """The launcher-side split (core/cyclesl.py): extract ∘ tail is the
+    monolithic cyclesl_round, bit-for-bit."""
+    task, xs, ys = setup
+    opt = adam(5e-3)
+    ccfg = CycleConfig(server_epochs=2)
+    server = init_entity(task.init_server(jax.random.PRNGKey(0)), opt)
+    clients = broadcast_entity(
+        init_entity(task.init_client(jax.random.PRNGKey(1)), opt), C)
+    key = jax.random.PRNGKey(3)
+
+    s_m, c_m, m_m = jax.jit(
+        lambda: cyclesl_round(task, server, clients, opt, opt, xs, ys, key,
+                              ccfg))()
+
+    def split_round():
+        feats, store = cyclesl_extract(task, clients, xs, ys)
+        return cyclesl_tail(task, server, clients, opt, opt, xs, ys, key,
+                            ccfg, feats, store)
+
+    s_s, c_s, m_s = jax.jit(split_round)()
+    for a, b in zip(jax.tree.leaves((s_m, c_m)), jax.tree.leaves((s_s, c_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in m_m:
+        np.testing.assert_array_equal(np.asarray(m_m[k]), np.asarray(m_s[k]))
+
+
+def test_pipelined_train_step_bundles_lower_and_compile():
+    """launch/steps.py: the (train_extract, train_tail) StepBundle pair
+    lowers and compiles against the local mesh with the declared
+    shardings (the dry-run contract)."""
+    from repro.configs import INPUT_SHAPES
+    from repro.configs.registry import smoke_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import build_pipelined_train_steps
+    cfg = smoke_config("gemma2-2b")
+    shape = next(s for s in INPUT_SHAPES.values() if s.kind == "train")
+    mesh = make_local_mesh()
+    eb, tb = build_pipelined_train_steps(cfg, mesh, shape)
+    assert (eb.name, tb.name) == ("train_extract", "train_tail")
+    with mesh:
+        jax.jit(eb.fn, in_shardings=eb.in_shardings,
+                out_shardings=eb.out_shardings
+                ).lower(*eb.abstract_args).compile()
+        jax.jit(tb.fn, in_shardings=tb.in_shardings,
+                out_shardings=tb.out_shardings,
+                donate_argnums=tb.donate
+                ).lower(*tb.abstract_args).compile()
+
+
+# ---------------------------------------------------------------- config
+def test_pipeline_config_json_roundtrip():
+    cfg = ExperimentConfig(algo="cyclesfl", pipeline_depth=1,
+                           pipeline_staleness="async")
+    back = ExperimentConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+    assert back == cfg
+
+
+def test_pipeline_config_validation():
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        ExperimentConfig(pipeline_depth=2).validate()
+    with pytest.raises(ValueError, match="pipeline_staleness"):
+        ExperimentConfig(pipeline_depth=1,
+                         pipeline_staleness="eager").validate()
+
+
+def test_pipeline_flags():
+    import argparse
+    ap = ExperimentConfig.add_arguments(argparse.ArgumentParser())
+    args = ap.parse_args(["--pipeline-depth", "1",
+                          "--pipeline-staleness", "async"])
+    cfg = ExperimentConfig.from_flags(args)
+    assert cfg.pipeline_depth == 1 and cfg.pipeline_staleness == "async"

@@ -12,7 +12,8 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.feature_store import FeatureStore, gather_batch, resample_plan
+from repro.core.feature_store import (FeatureStore, gather_batch,
+                                      masked_resample_plan, resample_plan)
 from repro.kernels import ref
 from repro.models.layers import apply_rope, rmsnorm, rmsnorm_init, softcap
 from repro.optim import adam
@@ -36,6 +37,57 @@ def test_resample_plan_permutation_property(total, epochs, batch, seed):
     for e in range(epochs):
         flat = arr[e].ravel()
         assert len(np.unique(flat)) == len(flat)   # no replacement
+
+
+@given(n_live=st.integers(2, 40), pad=st.integers(1, 30),
+       epochs=st.integers(1, 3), batch=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_masked_plan_live_sequence_invariant_under_padding(n_live, pad,
+                                                          epochs, batch,
+                                                          seed):
+    """Appending padded rows to the pool must not move a single live row
+    in the resample order: each row's sort key is a pure function of
+    (epoch key, row id), so the valid-step plan at capacity n_live+pad
+    equals the plan at capacity n_live exactly — the shape-invariance
+    the padded-vs-unpadded round goldens rest on — and every epoch's
+    valid steps draw distinct live rows (a permutation slice)."""
+    batch = min(batch, n_live)
+    key = jax.random.PRNGKey(seed)
+    plan0, ok0 = masked_resample_plan(key, jnp.ones(n_live), epochs, batch)
+    valid = jnp.concatenate([jnp.ones(n_live), jnp.zeros(pad)])
+    plan, ok = masked_resample_plan(key, valid, epochs, batch)
+    live_steps = n_live // batch
+    assert bool(jnp.all(ok0))
+    assert bool(jnp.all(ok[:, :live_steps]))
+    assert not bool(jnp.any(ok[:, live_steps:]))
+    np.testing.assert_array_equal(np.asarray(plan[:, :live_steps]),
+                                  np.asarray(plan0))
+    arr = np.asarray(plan[:, :live_steps])
+    for e in range(epochs):
+        flat = arr[e].ravel()
+        assert len(np.unique(flat)) == len(flat)      # no replacement
+        assert flat.size == 0 or flat.max() < n_live  # live rows only
+
+
+@given(mask=st.lists(st.booleans(), min_size=4, max_size=60),
+       epochs=st.integers(1, 3), batch=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_masked_plan_never_selects_padded_rows(mask, epochs, batch, seed):
+    """No padded row ever reaches a server minibatch, for ARBITRARY
+    live/padded interleavings (not just suffix padding): every index in
+    a step the validity mask marks ok points at a live pooled row."""
+    valid = jnp.asarray(mask, jnp.float32)
+    plan, ok = masked_resample_plan(jax.random.PRNGKey(seed), valid,
+                                    epochs, batch)
+    selected = np.asarray(plan)[np.asarray(ok)]       # [valid steps, batch]
+    assert np.asarray(valid)[selected.ravel().astype(int)].min(
+        initial=1.0) > 0
+    # step accounting: exactly n_valid // batch steps are ok per epoch
+    n_valid = int(np.asarray(valid).sum())
+    np.testing.assert_array_equal(
+        np.asarray(ok).sum(axis=-1), n_valid // batch)
 
 
 @given(c=st.integers(1, 5), b=st.integers(1, 8), d=st.integers(1, 8),
