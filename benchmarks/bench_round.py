@@ -28,6 +28,13 @@ algorithm:
                           (jax locks the device count at first init), a
                           ``(N, 1)`` ('data', 'model') mesh, and the
                           cohort capacity sized to divide every N.
+* ``shard_local``       — (``--shard-local [1,8]``) the sharded Engine
+                          with ``cycle.shard_local_resample`` off vs on,
+                          interleaved measurement per device count (one
+                          subprocess each): the off/on steady-state
+                          comparison behind the shard_map resample path,
+                          plus the loss-equality claim (the two paths
+                          must agree — shard-local is value-exact).
 
 Writes ``BENCH_round_latency.json`` so every PR records the perf
 trajectory (CI runs ``--smoke --devices 1,2,4`` and uploads the
@@ -50,6 +57,7 @@ import jax
 import numpy as np
 
 from repro.api import Engine, ExperimentConfig
+from repro.core.cyclesl import CycleConfig
 
 ALGOS = ("psl", "cyclepsl", "cyclesfl")
 
@@ -241,6 +249,76 @@ def pipeline_sweep(smoke: bool) -> dict:
     return out
 
 
+# -------------------------------------------------- shard-local sweep
+def shard_local_worker(n_devices: int, smoke: bool) -> dict:
+    """Shard-local resample off vs on at the CURRENT process's device
+    count, interleaved so timer drift hits both paths equally.  The two
+    runs share config, mesh, and cohort stream — only
+    ``cycle.shard_local_resample`` differs — and must produce the same
+    server loss (the path is value-exact)."""
+    base = ExperimentConfig(
+        algo="cyclesfl", task="image", rounds=1, n_clients=32,
+        attendance=0.25, batch=8, width=4 if smoke else 8, cut=2, seed=0,
+        eval_every=10**9, mesh_shape=(n_devices, 1),
+        mesh_axes=("data", "model"),
+        cycle=CycleConfig(server_epochs=2))
+    eng_off = _engine(base)
+    eng_on = _engine(base.with_cycle(shard_local_resample=True))
+    off_ms, on_ms = _interleaved(_round_call(eng_off), _round_call(eng_on),
+                                 iters=8 if smoke else 20)
+    loss_off = float(_round_call(eng_off)())
+    loss_on = float(_round_call(eng_on)())
+    return {
+        "devices": n_devices,
+        "jax_device_count": jax.device_count(),
+        "off_steady_ms": round(off_ms * 1e3, 3),
+        "on_steady_ms": round(on_ms * 1e3, 3),
+        "on_over_off": round(on_ms / off_ms, 3),
+        "compile_count_on": eng_on.algo.trace_count,
+        "losses_equal": loss_off == loss_on,
+    }
+
+
+def _forced_device_sweep(worker_flag: str, devices: list[int], smoke: bool,
+                         report) -> dict:
+    """Shared subprocess scaffold for the per-device-count sweeps: one
+    fresh process per count (XLA_FLAGS must bind before jax
+    initializes), the worker's JSON record on the last stdout line,
+    stderr captured on failure.  ``report(rec)`` formats the progress
+    line for one successful record."""
+    out = {}
+    for n in devices:
+        env = dict(os.environ)
+        # append so user-set XLA flags survive (last occurrence wins for
+        # the device count itself)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count={n}"
+                            ).strip()
+        cmd = [sys.executable, os.path.abspath(__file__), worker_flag,
+               str(n)]
+        if smoke:
+            cmd.append("--smoke")
+        proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
+        if proc.returncode != 0:
+            out[str(n)] = {"error": proc.stderr[-2000:]}
+            continue
+        rec = json.loads(proc.stdout.strip().splitlines()[-1])
+        out[str(n)] = rec
+        print(report(rec))
+    return out
+
+
+def shard_local_sweep(devices: list[int], smoke: bool) -> dict:
+    """One subprocess per device count, recording the off/on comparison."""
+    return _forced_device_sweep(
+        "--shard-local-worker", devices, smoke,
+        lambda rec: (f"[shard-local devices={rec['devices']}] "
+                     f"off={rec['off_steady_ms']}ms "
+                     f"on={rec['on_steady_ms']}ms "
+                     f"ratio={rec['on_over_off']} "
+                     f"losses_equal={rec['losses_equal']}"))
+
+
 # ------------------------------------------------------- device sweep
 def sweep_worker(n_devices: int, smoke: bool) -> dict:
     """One sharded measurement at the CURRENT process's device count:
@@ -267,30 +345,13 @@ def sweep_worker(n_devices: int, smoke: bool) -> dict:
 
 
 def device_sweep(devices: list[int], smoke: bool) -> dict:
-    """Spawn one subprocess per device count (XLA_FLAGS must bind before
-    jax initializes) and collect rounds/sec vs devices."""
-    out = {}
-    for n in devices:
-        env = dict(os.environ)
-        # append so user-set XLA flags survive (last occurrence wins for
-        # the device count itself)
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
-                            f" --xla_force_host_platform_device_count={n}"
-                            ).strip()
-        cmd = [sys.executable, os.path.abspath(__file__),
-               "--sweep-worker", str(n)]
-        if smoke:
-            cmd.append("--smoke")
-        proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
-        if proc.returncode != 0:
-            out[str(n)] = {"error": proc.stderr[-2000:]}
-            continue
-        rec = json.loads(proc.stdout.strip().splitlines()[-1])
-        out[str(n)] = rec
-        print(f"[devices={n}] steady_ms={rec['steady_ms']} "
-              f"rounds_per_sec={rec['rounds_per_sec']} "
-              f"compile_count={rec['compile_count']}")
-    return out
+    """One subprocess per device count: rounds/sec vs devices."""
+    return _forced_device_sweep(
+        "--sweep-worker", devices, smoke,
+        lambda rec: (f"[devices={rec['devices']}] "
+                     f"steady_ms={rec['steady_ms']} "
+                     f"rounds_per_sec={rec['rounds_per_sec']} "
+                     f"compile_count={rec['compile_count']}"))
 
 
 def run(smoke: bool = False) -> dict:
@@ -337,11 +398,21 @@ def main() -> dict:
     ap.add_argument("--pipeline", action="store_true",
                     help="also sweep the pipelined scheduler: rounds/sec "
                          "with pipeline_depth off vs sync vs async")
+    ap.add_argument("--shard-local", nargs="?", const="1,8", default=None,
+                    help="also sweep the shard-local resample off vs on "
+                         "at these device counts (default 1,8; one "
+                         "subprocess per count)")
     ap.add_argument("--sweep-worker", type=int, default=None,
+                    help=argparse.SUPPRESS)     # internal: one sweep point
+    ap.add_argument("--shard-local-worker", type=int, default=None,
                     help=argparse.SUPPRESS)     # internal: one sweep point
     args = ap.parse_args()
     if args.sweep_worker is not None:
         print(json.dumps(sweep_worker(args.sweep_worker, args.smoke)))
+        return {}
+    if args.shard_local_worker is not None:
+        print(json.dumps(shard_local_worker(args.shard_local_worker,
+                                            args.smoke)))
         return {}
     result = run(smoke=args.smoke)
     if args.pipeline:
@@ -349,6 +420,9 @@ def main() -> dict:
     if args.devices:
         result["device_sweep"] = device_sweep(
             [int(x) for x in args.devices.split(",")], args.smoke)
+    if args.shard_local:
+        result["shard_local"] = shard_local_sweep(
+            [int(x) for x in args.shard_local.split(",")], args.smoke)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"wrote {args.out}")

@@ -142,6 +142,17 @@ class ExperimentConfig:
         ap.add_argument("--server-epochs", type=int, default=1)
         ap.add_argument("--server-batch", type=int, default=None)
         ap.add_argument("--grad-clip", type=float, default=None)
+        ap.add_argument("--shard-local-resample", action="store_true",
+                        help="route the server inner loop's resample "
+                             "through the shard_map wrapper (per-shard "
+                             "index translation; needs --mesh-shape)")
+        ap.add_argument("--resample-kernel", default="auto",
+                        choices=("auto", "on", "off"),
+                        help="force the Pallas resample kernel on/off "
+                             "(auto = kernel on TPU, jnp.take elsewhere)")
+        ap.add_argument("--fused-gather-loss", action="store_true",
+                        help="fuse the resample gather with the server "
+                             "head's loss (linear-head tasks only)")
         ap.add_argument("--seed", type=int, default=0)
         ap.add_argument("--width", type=int, default=16)
         ap.add_argument("--cut", type=int, default=2)
@@ -194,7 +205,12 @@ class ExperimentConfig:
             pipeline_staleness=args.pipeline_staleness,
             cycle=CycleConfig(server_epochs=args.server_epochs,
                               server_batch=args.server_batch,
-                              grad_clip=args.grad_clip),
+                              grad_clip=args.grad_clip,
+                              shard_local_resample=args.shard_local_resample,
+                              resample_use_kernel={"auto": None, "on": True,
+                                                   "off": False}[
+                                                       args.resample_kernel],
+                              fused_gather_loss=args.fused_gather_loss),
         ).validate()
 
     def with_cycle(self, **kw) -> "ExperimentConfig":

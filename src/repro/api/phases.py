@@ -198,9 +198,14 @@ class ServerUpdate(Phase):
         if self.mode == "cycle":
             # the pooled feature dataset D_S^f stays sharded over the
             # batch axes; the masked resample inside the inner loop is a
-            # sharded permutation-gather (feature_resample kernel on TPU).
-            # A pipelined extract dispatch hands the finished pool over
-            # via v.store; both paths build it with the same pool_store.
+            # sharded permutation-gather (feature_resample kernel on TPU;
+            # ctx.cycle.shard_local_resample routes it through the
+            # shard_map wrapper so the gather stays shard-LOCAL, and
+            # ctx.cycle.fused_gather_loss fuses it with the head loss —
+            # both knobs ride CycleConfig, so the monolithic round and
+            # the pipelined tail take the same path).  A pipelined
+            # extract dispatch hands the finished pool over via v.store;
+            # both paths build it with the same pool_store.
             store = (v.store if v.store is not None
                      else pool_store(v.feats, v.ys, mask=v.mask,
                                      mesh=ctx.mesh))

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.feature_store import (FeatureStore, gather_batch,
                                       masked_resample_plan, pool_store,
-                                      resample_plan)
+                                      resample_plan, shard_local_gather)
 from repro.core.protocol import (EntityState, entity_step, masked_axis0_mean,
                                  select_entities)
 from repro.core.split import SplitTask
@@ -55,6 +55,24 @@ class CycleConfig:
     # global-norm clip applied to every server inner-loop step and every
     # client VJP step (None = no clipping)
     grad_clip: Optional[float] = None
+    # shard-LOCAL resample: route the server inner loop's gather through
+    # the shard_map wrapper (per-shard index translation + masked
+    # cross-shard fixup) instead of letting GSPMD gather the pooled
+    # operand around the kernel.  Value-exact (bit-for-bit the GSPMD
+    # path); only meaningful when the round runs on a mesh.
+    shard_local_resample: bool = False
+    # force the Pallas resample kernel on (True, interpret off-TPU) or
+    # off (False, jnp.take); None = backend default (kernel on TPU).
+    # This is the config-resolved choice gather_batch receives inside
+    # the inner loop — tests and CPU users can pin either path.
+    resample_use_kernel: Optional[bool] = None
+    # fuse the resample gather with the server head's logits/loss
+    # (kernels/gather_loss.py) so the gathered minibatch never
+    # materializes and D_S^f is read once per epoch.  Engages only for
+    # tasks exposing a linear head (SplitTask.server_head) with plain
+    # integer labels; ignored (with the classic path kept) otherwise,
+    # and superseded by shard_local_resample on a mesh.
+    fused_gather_loss: bool = False
     # NOTE: the old ``batch_constraint`` callable hook is gone — server
     # batch sharding now flows from the mesh itself (the serializable
     # ``ExperimentConfig.mesh_shape`` knobs / the launcher's mesh) via
@@ -78,10 +96,26 @@ def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
     ``mesh`` pins every resampled minibatch data-parallel over the batch
     axes (:func:`repro.sharding.specs.constrain_server_batch`); the
     gather itself dispatches to the ``feature_resample`` Pallas kernel
-    on TPU (see :func:`gather_batch`).  ``mesh=None`` leaves placement
-    to GSPMD — layout only, never values.
+    on TPU, with ``ccfg.resample_use_kernel`` as the explicit override
+    (see :func:`gather_batch`).  ``ccfg.shard_local_resample`` + mesh
+    routes the gather through :func:`shard_local_gather` instead — the
+    shard_map wrapper whose per-shard index translation keeps the
+    resample shard-LOCAL (bit-for-bit the GSPMD path).
+    ``ccfg.fused_gather_loss`` additionally fuses gather and head loss
+    through ``kernels.ops.fused_gather_loss_mean`` when the task
+    exposes a linear server head.  ``mesh=None`` leaves placement to
+    GSPMD — layout only, never values.
     """
     sb = min(ccfg.server_batch or batch, store.size)
+    shard_local = ccfg.shard_local_resample and mesh is not None
+    # fused path: linear head + single integer label leaf, and not the
+    # shard-local route (fusing INSIDE the shard_map body is a
+    # follow-on; the bare fused pallas_call would reintroduce the
+    # gather-around-the-kernel this config is asking to avoid)
+    fused = (ccfg.fused_gather_loss and not shard_local
+             and getattr(task, "server_head", None) is not None
+             and isinstance(store.labels, jax.Array)
+             and jnp.issubdtype(store.labels.dtype, jnp.integer))
     if store.valid is None:
         plan = resample_plan(key, store.size, ccfg.server_epochs, sb)
         step_ok = None
@@ -94,12 +128,28 @@ def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
             step_ok = step_ok[:, : ccfg.server_steps]
     plan2 = plan.reshape(-1, sb)                     # [E*steps, sb]
 
+    def fused_step_loss(params, idx):
+        from repro.kernels import ops
+        w = task.server_head(params)
+        return ops.fused_gather_loss_mean(
+            store.features.reshape((store.size, -1)), store.labels, idx, w)
+
     def apply_step(entity, idx):
-        f, y = gather_batch(store, idx)
-        if mesh is not None:
-            from repro.sharding.specs import constrain_server_batch
-            f, y = constrain_server_batch(f, y, mesh)
-        loss, grads = jax.value_and_grad(task.server_loss)(entity.params, f, y)
+        if fused:
+            loss, grads = jax.value_and_grad(fused_step_loss)(entity.params,
+                                                              idx)
+        else:
+            if shard_local:
+                f, y = shard_local_gather(store, idx, mesh,
+                                          use_kernel=ccfg.resample_use_kernel)
+            else:
+                f, y = gather_batch(store, idx,
+                                    use_kernel=ccfg.resample_use_kernel)
+            if mesh is not None:
+                from repro.sharding.specs import constrain_server_batch
+                f, y = constrain_server_batch(f, y, mesh)
+            loss, grads = jax.value_and_grad(task.server_loss)(entity.params,
+                                                               f, y)
         grads = _maybe_clip(grads, ccfg.grad_clip)
         return entity_step(entity, grads, opt_s), loss
 

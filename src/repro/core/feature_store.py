@@ -111,10 +111,11 @@ def gather_batch(store: FeatureStore, idx,
 
     Caveat: GSPMD has no partitioning rule for a bare ``pallas_call``,
     so on a mesh with the pool sharded over 'data' XLA gathers the
-    operand around the kernel — correct, but the gather is not yet
-    shard-LOCAL.  Making it so needs a ``shard_map`` wrapper with
-    per-shard index translation (ROADMAP "Kernel depth"); the jnp path
-    partitions natively.
+    operand around the kernel — correct, but the gather is not
+    shard-LOCAL.  :func:`shard_local_gather` is the ``shard_map`` wrapper
+    with per-shard index translation that keeps it local (CycleConfig.
+    shard_local_resample routes the server inner loop there); the jnp
+    path partitions natively.
     """
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
@@ -124,6 +125,105 @@ def gather_batch(store: FeatureStore, idx,
     else:
         take = lambda a: jnp.take(a, idx, axis=0)
     return take(store.features), jax.tree.map(take, store.labels)
+
+
+def shard_slice_indices(idx, shard: int, rows_per_shard: int
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Translate global gather indices into ONE shard's pool-slice frame.
+
+    The index-translation contract of the shard-local resample: shard
+    ``s`` owns the contiguous global rows ``[s * rows_per_shard, (s+1) *
+    rows_per_shard)``; a global index lands in exactly one shard's
+    slice, so across shards the ``ok`` masks partition the gather.
+    Returns ``(local, ok)`` — ``local`` is clipped into ``[0,
+    rows_per_shard)`` so masked-off rows still index safely (their
+    gathered values are zeroed by the caller before the cross-shard
+    fixup sum).
+    """
+    local = idx - shard * rows_per_shard
+    ok = (local >= 0) & (local < rows_per_shard)
+    return jnp.clip(local, 0, rows_per_shard - 1).astype(jnp.int32), ok
+
+
+def shard_local_gather(store: FeatureStore, idx, mesh,
+                       use_kernel: Optional[bool] = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Shard-LOCAL resample: ``out[i] = store[idx[i]]`` without gathering
+    the pooled operand around the kernel.
+
+    GSPMD has no partitioning rule for a bare ``pallas_call``, so the
+    kernel path of :func:`gather_batch` all-gathers D_S^f per minibatch
+    on a sharded mesh.  This wrapper keeps the gather local: a
+    ``shard_map`` over the pool's batch axes gives each shard only its
+    contiguous row slice, per-shard index translation
+    (:func:`shard_slice_indices`) selects the plan rows that land in the
+    slice, and rows that don't are fixed up by a masked cross-shard sum
+    — every output row has exactly ONE live contribution (the masks
+    partition the gather), so the psum is value-exact and the result is
+    bit-for-bit the GSPMD gather.  The plan indices are uniform over
+    shards (``resample_plan``/``masked_resample_plan`` permutations are
+    computed from the replicated round key), which is what makes the
+    replicated-``idx`` in_spec correct.
+
+    Communication: a reduce-scatter (or all-reduce when the minibatch
+    doesn't divide the shards) of the [M, ...] minibatch instead of an
+    all-gather of the [T, ...] pool — M << T in every CycleSL setting.
+    Falls back to :func:`gather_batch` when the pool rows don't divide
+    the batch axes (``pool_shard_info`` returns None).
+    """
+    from repro.sharding.specs import pool_shard_info
+    info = pool_shard_info(mesh, store.size) if mesh is not None else None
+    if info is None:
+        return gather_batch(store, idx, use_kernel=use_kernel)
+    axes, n_shards, rows_per_shard = info
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    lead = axes if len(axes) > 1 else axes[0]
+    M = idx.shape[0]
+    scatter = M % n_shards == 0
+
+    def row_spec(a):
+        return P(lead, *([None] * (a.ndim - 1)))
+
+    def out_spec(a):
+        return row_spec(a) if scatter else P(*([None] * a.ndim))
+
+    def body(feats, labels, idx):
+        shard = jnp.zeros((), jnp.int32)
+        for a in axes:
+            shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+        local, ok = shard_slice_indices(idx, shard, rows_per_shard)
+
+        def take(a):
+            if use_kernel:
+                from repro.kernels import ops
+                rows = ops.resample_rows(a, local)
+            else:
+                rows = jnp.take(a, local, axis=0)
+            # mask off rows owned by other shards, then cross-shard
+            # fixup: exactly one shard contributes each output row, so
+            # summing the (n_shards - 1) zeros is value-exact
+            rows = jnp.where(ok.reshape((-1,) + (1,) * (rows.ndim - 1)),
+                             rows, jnp.zeros((), rows.dtype))
+            if scatter:
+                return jax.lax.psum_scatter(rows, lead,
+                                            scatter_dimension=0, tiled=True)
+            return jax.lax.psum(rows, lead)
+
+        return take(feats), jax.tree.map(take, labels)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(row_spec(store.features),
+                  jax.tree.map(row_spec, store.labels),
+                  P(None)),
+        out_specs=(out_spec(store.features),
+                   jax.tree.map(out_spec, store.labels)),
+        check_rep=False)
+    return fn(store.features, store.labels, idx.astype(jnp.int32))
 
 
 def pool_store(feats, ys, mask=None, mesh=None) -> FeatureStore:

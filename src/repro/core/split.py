@@ -30,6 +30,13 @@ class SplitTask:
     server_apply: Callable[[Any, Any], Any]           # (θ_S, f) -> outputs
     loss: Callable[[Any, Any], jnp.ndarray]           # (outputs, y) -> scalar
     metrics: Callable[[Any, Any], dict]               # (outputs, y) -> dict
+    # optional: extract the server head's [D_flat, K] weight matrix from
+    # θ_S when the WHOLE server is one bias-free flatten-matmul + xent
+    # (the StageModel zoo's final stage at the last cut).  Set iff
+    # ``server_loss(sp, f, y) == xent(flatten(f) @ server_head(sp), y)``
+    # exactly — the contract the fused gather+loss kernel
+    # (CycleConfig.fused_gather_loss) relies on; None disables fusion.
+    server_head: Any = None                           # (θ_S) -> w, or None
 
     # -------- derived --------
     def server_loss(self, sp, features, y):
@@ -90,9 +97,17 @@ def make_stage_task(model: StageModel, cut: int, kind: str = "xent",
             x = model.stages[i][1](sp[i - cut], x)
         return x
 
+    # fused gather+loss contract: when the entire server half is the
+    # model's final flatten-matmul head (last-cut split, xent), expose
+    # its weight matrix so the inner loop can fuse gather and loss
+    server_head = None
+    if (kind == "xent" and cut == model.n_stages - 1
+            and getattr(model, "head_is_linear", False)):
+        server_head = lambda sp: jax.tree.leaves(sp[-1])[0]
+
     return SplitTask(name or f"{model.name}@cut{cut}",
                      init_client, init_server, client_forward,
-                     server_apply, loss, metrics)
+                     server_apply, loss, metrics, server_head=server_head)
 
 
 # -------------------------------------------------- Transformer builder

@@ -1,0 +1,78 @@
+"""CycleSL fused resample-gather + server-head loss — Pallas TPU kernel.
+
+The server inner loop's hot path is gather-then-loss: resample a
+minibatch of pooled rows (Eq. 3), push it through the server head, take
+the cross-entropy.  Dispatched separately, the gathered [sb, D] batch
+round-trips HBM between the two (the gather kernel writes it, the loss
+matmul reads it back) — so across one server epoch D_S^f is effectively
+read twice per step.  This kernel fuses them: the same scalar-prefetch
+grid as ``feature_resample`` streams ONE source row-block per output
+block straight into the head matmul + log-softmax, so the gathered
+batch never materializes and the pool is read exactly once per epoch.
+
+Head model: a flattened linear head ``logits = f @ w (+ b)`` with
+integer cross-entropy labels — the StageModel zoo's final stage (the
+paper's CNN/MLP heads are all bias-free flatten-matmuls; an optional
+bias is supported for generality).  The per-row labels ride the scalar
+prefetch next to the plan indices, so the label gather is fused too.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_loss_kernel(idx_ref, y_ref, src_ref, w_ref, b_ref, out_ref):
+    # the source row-block was selected by the index_map (idx_ref[i]);
+    # head matmul + stable log-softmax + label pick in one VMEM pass
+    i = pl.program_id(0)
+    f = src_ref[...].astype(jnp.float32)                    # [1, D]
+    logits = f @ w_ref[...].astype(jnp.float32)             # [1, K]
+    logits = logits + b_ref[...].astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = logits - m
+    ll = z - jnp.log(jnp.sum(jnp.exp(z), axis=-1, keepdims=True))
+    # one-hot label pick — vector select instead of a dynamic scalar
+    # gather (VPU-friendly; y is a prefetched SMEM scalar)
+    y = y_ref[i]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, ll.shape, 1) == y)
+    out_ref[...] = -jnp.sum(jnp.where(onehot, ll, 0.0), axis=-1,
+                            keepdims=True)
+
+
+def gather_loss_microbatch(src, labels, idx, w, b: Optional[jax.Array] = None,
+                           *, interpret: bool = True):
+    """Per-row fused gather + linear-head cross-entropy.
+
+    ``out[i] = xent(src[idx[i]] @ w (+ b), labels[idx[i]])`` — src
+    [T, D], labels [T] int, idx [M] int32, w [D, K], b [K] or None.
+    Returns the per-row losses [M] float32 (the caller owns the
+    microbatch mean).  Like ``feature_resample``, rows_per_block=1 keeps
+    the index_map exact: each output row streams its own source row.
+    """
+    T, D = src.shape
+    K = w.shape[1]
+    M = idx.shape[0]
+    if b is None:
+        b = jnp.zeros((K,), jnp.float32)
+    yv = jnp.take(labels, idx.astype(jnp.int32), axis=0).astype(jnp.int32)
+    out = pl.pallas_call(
+        _gather_loss_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(M,),
+            in_specs=[
+                pl.BlockSpec((1, D), lambda i, idx_ref, y_ref: (idx_ref[i], 0)),
+                pl.BlockSpec((D, K), lambda i, idx_ref, y_ref: (0, 0)),
+                pl.BlockSpec((K,), lambda i, idx_ref, y_ref: (0,)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda i, idx_ref, y_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), yv, src, w, b)
+    return out[:, 0]

@@ -10,6 +10,7 @@ from functools import partial
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import feature_resample as _fr
@@ -66,6 +67,56 @@ def resample_rows(src, idx):
     flat = src.reshape((src.shape[0], -1))
     out = _fr.feature_resample(flat, idx, interpret=default_interpret())
     return out.reshape((idx.shape[0],) + src.shape[1:])
+
+
+def gather_loss_microbatch(src, labels, idx, w, b=None):
+    """Fused resample-gather + linear-head cross-entropy per-row losses
+    via the ``gather_loss`` scalar-prefetch kernel (rows flattened to
+    2-D like ``resample_rows``).  src [T, ...], labels [T] int, idx [M],
+    w [prod(...), K] -> [M] float32.  Un-jitted for the same reason as
+    ``resample_rows``: it inlines into the server inner loop's trace."""
+    from repro.kernels import gather_loss as _gl
+    flat = src.reshape((src.shape[0], -1))
+    return _gl.gather_loss_microbatch(flat, labels, idx, w, b,
+                                      interpret=default_interpret())
+
+
+@jax.custom_vjp
+def fused_gather_loss_mean(src, labels, idx, w):
+    """Mean fused gather+loss over one microbatch, differentiable in the
+    head weights ``w`` ONLY (the pooled features are stop_gradient'd by
+    construction — paper Eq. 3 treats D_S^f as data).
+
+    Forward streams the pool through the Pallas kernel (the gathered
+    batch never materializes); backward is the analytic linear-head
+    cross-entropy VJP — ``dw = fᵀ (softmax(logits) − onehot(y)) / M`` —
+    recomputed in jnp (the re-gather is one [M, D] read, and M << T).
+    """
+    return jnp.mean(gather_loss_microbatch(src, labels, idx, w))
+
+
+def _fglm_fwd(src, labels, idx, w):
+    return fused_gather_loss_mean(src, labels, idx, w), (src, labels, idx, w)
+
+
+def _fglm_bwd(res, g):
+    import numpy as np
+    src, labels, idx, w = res
+    f = jnp.take(src.reshape((src.shape[0], -1)), idx,
+                 axis=0).astype(jnp.float32)
+    logits = f @ w.astype(jnp.float32)
+    y = jnp.take(labels, idx, axis=0)
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, w.shape[1], dtype=jnp.float32)
+    dlogits = (p - onehot) * (g / idx.shape[0])
+    dw = (f.T @ dlogits).astype(w.dtype)
+    zero = lambda x: (np.zeros(x.shape, jax.dtypes.float0)
+                      if jnp.issubdtype(x.dtype, jnp.integer)
+                      else jnp.zeros_like(x))
+    return zero(src), zero(labels), zero(idx), dw
+
+
+fused_gather_loss_mean.defvjp(_fglm_fwd, _fglm_bwd)
 
 
 @partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "weight_decay"))

@@ -77,6 +77,24 @@ def feature_resample_ref(src, idx):
     return jnp.take(src, idx, axis=0)
 
 
+def gather_loss_microbatch_ref(src, labels, idx, w, b=None):
+    """Fused gather + linear-head cross-entropy oracle (fp32 math).
+
+    ``out[i] = xent(src[idx[i]] @ w (+ b), labels[idx[i]])`` — src
+    [T, D], labels [T] int, idx [M], w [D, K], b [K] or None.
+    Returns the per-row losses [M] float32; their mean equals
+    ``split.xent_loss`` of the unfused gather-then-head path.
+    """
+    f = jnp.take(src, idx, axis=0).astype(jnp.float32)
+    logits = f @ w.astype(jnp.float32)
+    if b is not None:
+        logits = logits + b.astype(jnp.float32)
+    ll = jax.nn.log_softmax(logits, axis=-1)
+    y = jnp.take(labels, idx, axis=0)
+    return -jnp.take_along_axis(ll, y[:, None].astype(jnp.int32),
+                                axis=1)[:, 0]
+
+
 def fused_adam_ref(p, g, m, v, step, *, lr, b1=0.9, b2=0.999, eps=1e-8,
                    weight_decay=0.0):
     """Reference Adam step (matches repro.optim.adam semantics)."""

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import PROGRAMS, build_algorithm, get_program
+from repro.api.phases import build_pipelined_algorithm
 from repro.core.cyclesl import CycleConfig
 from repro.core.split import make_stage_task
 from repro.models.cnn import mlp
@@ -81,12 +82,19 @@ def _place(x, mesh):
         x, NamedSharding(mesh, batch_spec(mesh, x.shape[0], x.ndim - 1)))
 
 
-def _drive(name, task, xs, ys, mesh=None, rounds: int = ROUNDS):
+def _drive(name, task, xs, ys, mesh=None, rounds: int = ROUNDS,
+           shard_local: bool = False, pipelined: bool = False):
     """Run ``rounds`` padded rounds of one algorithm (optionally on a
     mesh with full TrainState/input placement) and return
     ``(state, metric rows, trace count)``.  tests/test_mesh.py reuses
     this so the in-process goldens and this subprocess checker drive the
-    exact same protocol."""
+    exact same protocol.
+
+    ``shard_local`` turns on ``CycleConfig.shard_local_resample`` (the
+    shard_map resample path); ``pipelined`` drives the (extract, tail)
+    dispatch pair in sync-barrier order instead of the monolithic round
+    (returns ``None`` for the fused sequential programs, which have no
+    ExtractFeatures head to split on)."""
     opt = adam(5e-3)
     program = get_program(name)
     kw = {}
@@ -96,8 +104,13 @@ def _drive(name, task, xs, ys, mesh=None, rounds: int = ROUNDS):
                 jax.random.PRNGKey(0), C))
         kw = dict(mesh=mesh,
                   state_shardings=train_state_shardings(a_state, mesh))
-    algo = build_algorithm(program, task, opt, opt,
-                           CycleConfig(server_epochs=2), **kw)
+    ccfg = CycleConfig(server_epochs=2, shard_local_resample=shard_local)
+    if pipelined:
+        algo = build_pipelined_algorithm(program, task, opt, opt, ccfg, **kw)
+        if algo is None:
+            return None
+    else:
+        algo = build_algorithm(program, task, opt, opt, ccfg, **kw)
     state = algo.init(jax.random.PRNGKey(0), n_clients=C)
     cohort = jnp.arange(C)
     if mesh is not None:
@@ -106,8 +119,13 @@ def _drive(name, task, xs, ys, mesh=None, rounds: int = ROUNDS):
     rows = []
     for r, mask in enumerate(_masks(rounds)):
         m = _place(mask, mesh) if mesh is not None else mask
-        state, mets = algo.round(state, cohort, xs, ys,
-                                 jax.random.PRNGKey(r), m)
+        if pipelined:
+            stage = algo.extract(state, cohort, xs, ys, m)
+            state, mets = algo.tail(state, cohort, xs, ys,
+                                    jax.random.PRNGKey(r), stage, m)
+        else:
+            state, mets = algo.round(state, cohort, xs, ys,
+                                     jax.random.PRNGKey(r), m)
         rows.append({k: np.asarray(v) for k, v in mets.items()})
     return state, rows, algo.trace_count
 
@@ -137,6 +155,33 @@ def check_algorithm(name, task, xs, ys, meshN, tol: float) -> dict:
     return rec
 
 
+def check_shard_local(name, task, xs, ys, meshes) -> dict:
+    """The shard-local acceptance golden: on every mesh, for both the
+    monolithic round and the pipelined (extract, tail) schedule, the
+    ``shard_local_resample`` path must be BIT-FOR-BIT the GSPMD
+    gather-around-the-kernel path and still trace once per dispatch
+    (the shard_map wrapper must not retrace across live cohort sizes).
+    Non-cycle algorithms never touch the resample, so their equality is
+    trivially exact — running them all pins that the knob is inert
+    where it should be."""
+    rec = {"ok": True}
+    for label, mesh in meshes:
+        for pipelined in (False, True):
+            base = _drive(name, task, xs, ys, mesh, shard_local=False,
+                          pipelined=pipelined)
+            if base is None:        # fused sequential program: no split
+                continue
+            on = _drive(name, task, xs, ys, mesh, shard_local=True,
+                        pipelined=pipelined)
+            d = _max_diff(base[0], base[1], on[0], on[1])
+            traces = on[2]
+            budget = 2 if pipelined else 1
+            key = f"{label}{'_pipelined' if pipelined else ''}"
+            rec[key] = {"diff": d, "traces": traces}
+            rec["ok"] = rec["ok"] and d == 0.0 and traces == budget
+    return rec
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8)
@@ -145,6 +190,9 @@ def main() -> int:
     ap.add_argument("--tol", type=float, default=1e-5,
                     help="max abs diff tolerated for the N-device mesh "
                          "(cross-device reduction reorder noise)")
+    ap.add_argument("--shard-local", action="store_true",
+                    help="run the shard-local-vs-GSPMD resample golden "
+                         "instead of the sharded-vs-unsharded sweep")
     args = ap.parse_args()
     n = args.devices
     if jax.device_count() < n:
@@ -157,9 +205,18 @@ def main() -> int:
     task, xs, ys = _task_and_data()
     algos = (args.algos.split(",") if args.algos else sorted(PROGRAMS))
     report = {"devices": n, "capacity": C, "rounds": ROUNDS, "algos": {}}
-    for name in algos:
-        report["algos"][name] = check_algorithm(name, task, xs, ys, meshN,
-                                                args.tol)
+    if args.shard_local:
+        mesh1 = jax.make_mesh((1, 1), ("data", "model"),
+                              devices=jax.devices()[:1])
+        meshes = [("1dev", mesh1), (f"{n}dev", meshN)]
+        report["mode"] = "shard_local"
+        for name in algos:
+            report["algos"][name] = check_shard_local(name, task, xs, ys,
+                                                      meshes)
+    else:
+        for name in algos:
+            report["algos"][name] = check_algorithm(name, task, xs, ys,
+                                                    meshN, args.tol)
     report["ok"] = all(a["ok"] for a in report["algos"].values())
     print(json.dumps(report, indent=1))
     return 0 if report["ok"] else 1

@@ -59,11 +59,17 @@ class StageModel:
     """
 
     def __init__(self, name: str, stages: Sequence[tuple[Callable, Callable]],
-                 n_classes: int):
+                 n_classes: int, head_is_linear: bool = False):
         self.name = name
         self.stages = list(stages)
         self.n_classes = n_classes
         self.n_stages = len(stages)
+        # True iff the FINAL stage is a bias-free flatten-matmul
+        # (``x.reshape(B, -1) @ w``): the contract that lets a last-cut
+        # split expose the head to the fused gather+loss kernel
+        # (SplitTask.server_head).  resnet9's head pools first, so it
+        # does NOT qualify.
+        self.head_is_linear = head_is_linear
 
     def init(self, key):
         keys = jax.random.split(key, self.n_stages)
@@ -110,7 +116,8 @@ def femnist_cnn(n_classes: int = 62, width: int = 32) -> StageModel:
         return x @ p["lin"]["w"]
 
     return StageModel("femnist_cnn", [(s0_init, s0), (s1_init, s1),
-                                      (s2_init, s2), (s3_init, s3)], n_classes)
+                                      (s2_init, s2), (s3_init, s3)], n_classes,
+                      head_is_linear=True)
 
 
 # ------------------------------------------------------------- LEAF CelebA
@@ -143,7 +150,8 @@ def celeba_cnn(n_classes: int = 2, width: int = 32, img: int = 84) -> StageModel
     for _ in range(3):
         stages.append((conv_stage_init(w, w), conv_stage))
     stages.append((head_init, head))
-    return StageModel("celeba_cnn", stages, n_classes)
+    return StageModel("celeba_cnn", stages, n_classes,
+                      head_is_linear=True)
 
 
 # ----------------------------------------------------------------- ResNet9
@@ -215,4 +223,4 @@ def mlp(d_in: int, hidden: Sequence[int], d_out: int) -> StageModel:
     stages = [(lin_init(a, b), partial(lin, True))
               for a, b in zip(dims[:-1], dims[1:])]
     stages.append((lin_init(dims[-1], d_out), partial(lin, False)))
-    return StageModel("mlp", stages, d_out)
+    return StageModel("mlp", stages, d_out, head_is_linear=True)

@@ -172,6 +172,45 @@ def constrain_batch(x, batch_dims: int = 1):
         return x
 
 
+def pool_shard_info(mesh: Optional[Mesh], total: int
+                    ) -> Optional[tuple[tuple[str, ...], int, int]]:
+    """Per-shard pool-slice geometry for the shard-local resample.
+
+    Mirrors :func:`batch_spec`'s axis choice for a pooled ``[T, ...]``
+    feature array (the leading rows over ``('pod', 'data')``, falling
+    back to ``'data'`` alone when T doesn't divide the combined size) and
+    returns ``(axes, n_shards, rows_per_shard)`` — shard ``s`` owns the
+    contiguous global row slice ``[s * rows_per_shard, (s+1) *
+    rows_per_shard)``.  ``None`` means the pool cannot be evenly
+    sliced over any batch axis (the caller must keep the GSPMD gather).
+    """
+    if mesh is None:
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if not axes or total % size != 0:
+        if "data" in mesh.shape and total % mesh.shape["data"] == 0:
+            axes, size = ("data",), mesh.shape["data"]
+        else:
+            return None
+    return axes, size, total // size
+
+
+def pool_slice_spec(mesh: Mesh, total: int, ndim: int) -> Optional[P]:
+    """PartitionSpec of one pooled ``[T, ...]`` array under the per-shard
+    slice geometry of :func:`pool_shard_info` (leading rows over the
+    batch axes, trailing dims replicated); ``None`` when the pool has no
+    even slicing."""
+    info = pool_shard_info(mesh, total)
+    if info is None:
+        return None
+    axes, _, _ = info
+    lead = axes if len(axes) > 1 else axes[0]
+    return P(lead, *([None] * (ndim - 1)))
+
+
 def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
     """Shard the leading batch dim over ('pod','data') if divisible."""
     axes = tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -4,6 +4,14 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "kernels: kernel-equivalence, shard-local resample, and Pallas "
+        "property suites (the CI 'kernels' leg runs `-m kernels` under 8 "
+        "forced host devices)")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -4,11 +4,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.feature_resample import feature_resample
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gather_loss import gather_loss_microbatch
 from repro.kernels.ssd_scan import ssd_scan
 from repro.kernels.topk_gating import topk_gating
+
+pytestmark = pytest.mark.kernels
 
 RNG = np.random.default_rng(42)
 
@@ -115,6 +118,141 @@ def test_feature_resample_vs_ref(T, D, M, dtype):
     out = feature_resample(src, idx)
     want = ref.feature_resample_ref(src, idx)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# ------------------------------------------------ resample_rows (nd wrapper)
+@pytest.mark.parametrize("trailing", [(), (8,), (3, 5), (2, 3, 4)],
+                         ids=["1d", "2d", "3d", "4d"])
+@pytest.mark.parametrize("T,M", [(37, 16), (300, 64), (128, 37), (64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_resample_rows_vs_ref(trailing, T, M, dtype):
+    """The nd row-gather entry point FeatureStore dispatches to, across
+    dtypes, non-power-of-two row counts, and >2-D trailing shapes — in
+    interpret mode on CPU (the validated kernel fallback)."""
+    src = jnp.asarray(RNG.normal(size=(T,) + trailing) * 10, dtype)
+    idx = jnp.asarray(RNG.integers(0, T, size=M), jnp.int32)
+    out = ops.resample_rows(src, idx)
+    want = jnp.take(src, idx, axis=0)
+    assert out.dtype == src.dtype and out.shape == (M,) + trailing
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# --------------------------------------------------- fused gather + loss
+GL_CASES = [
+    # T, D, K, M (non-power-of-two rows, narrow/wide heads, M != T)
+    (37, 16, 5, 12),
+    (300, 24, 3, 50),
+    (64, 8, 10, 64),
+    (128, 33, 7, 19),
+]
+
+
+@pytest.mark.parametrize("case", GL_CASES, ids=[str(c) for c in GL_CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bias", [False, True])
+def test_gather_loss_microbatch_vs_ref(case, dtype, bias):
+    T, D, K, M = case
+    src = jnp.asarray(RNG.normal(size=(T, D)), dtype)
+    labels = jnp.asarray(RNG.integers(0, K, size=T), jnp.int32)
+    idx = jnp.asarray(RNG.integers(0, T, size=M), jnp.int32)
+    w = jnp.asarray(RNG.normal(size=(D, K)) * 0.3, dtype)
+    b = (jnp.asarray(RNG.normal(size=(K,)), jnp.float32) if bias else None)
+    out = gather_loss_microbatch(src, labels, idx, w, b, interpret=True)
+    want = ref.gather_loss_microbatch_ref(src, labels, idx, w, b)
+    assert out.dtype == jnp.float32 and out.shape == (M,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("trailing", [(6,), (4, 3), (2, 3, 2)],
+                         ids=["2d", "3d", "4d"])
+def test_gather_loss_ops_wrapper_flattens_trailing_shapes(trailing):
+    """ops.gather_loss_microbatch flattens [T, ...] rows exactly like the
+    head's ``x.reshape(B, -1)`` before the matmul."""
+    import math
+    T, K, M = 40, 7, 20
+    D = math.prod(trailing)
+    src = jnp.asarray(RNG.normal(size=(T,) + trailing), jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, K, size=T), jnp.int32)
+    idx = jnp.asarray(RNG.integers(0, T, size=M), jnp.int32)
+    w = jnp.asarray(RNG.normal(size=(D, K)) * 0.3, jnp.float32)
+    out = ops.gather_loss_microbatch(src, labels, idx, w)
+    want = ref.gather_loss_microbatch_ref(src.reshape(T, -1), labels, idx, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)
+
+
+def test_fused_gather_loss_mean_value_and_grad_match_ref():
+    """The custom_vjp wrapper: forward equals the unfused
+    gather-then-xent mean, backward equals autodiff through the ref —
+    the contract that lets the server inner loop train on the fused
+    kernel."""
+    from repro.core.split import xent_loss
+    T, D, K, M = 48, 12, 5, 16
+    src = jnp.asarray(RNG.normal(size=(T, D)), jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, K, size=T), jnp.int32)
+    idx = jnp.asarray(RNG.integers(0, T, size=M), jnp.int32)
+    w = jnp.asarray(RNG.normal(size=(D, K)) * 0.3, jnp.float32)
+
+    def unfused(w):
+        f = jnp.take(src, idx, axis=0)
+        return xent_loss(f @ w, jnp.take(labels, idx, axis=0))
+
+    val, grad = jax.value_and_grad(
+        lambda w: ops.fused_gather_loss_mean(src, labels, idx, w))(w)
+    want_val, want_grad = jax.value_and_grad(unfused)(w)
+    np.testing.assert_allclose(float(val), float(want_val), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(grad), np.asarray(want_grad),
+                               atol=1e-5)
+
+
+def test_fused_gather_loss_round_matches_classic_path():
+    """Round-level golden for CycleConfig.fused_gather_loss: on a
+    last-cut linear-head task the fused inner loop must (a) actually
+    engage (server_head threaded by make_stage_task) and (b) train to
+    the same state/metrics as the classic gather-then-loss path, masked
+    and unmasked — while a mid-cut task keeps server_head None and the
+    knob bit-for-bit inert."""
+    from repro.api import build_algorithm, get_program
+    from repro.core.cyclesl import CycleConfig
+    from repro.core.split import make_stage_task
+    from repro.models.cnn import mlp
+    from repro.optim import adam
+
+    rng = np.random.default_rng(11)
+    C, B = 6, 8
+    model = mlp(8, [16], 4)
+    xs = jnp.asarray(rng.normal(size=(C, B, 8)), jnp.float32)
+    ys = jnp.asarray(rng.integers(0, 4, size=(C, B)))
+    opt = adam(5e-3)
+
+    def drive(task, fused, mask):
+        algo = build_algorithm(
+            get_program("cyclesfl"), task, opt, opt,
+            CycleConfig(server_epochs=2, fused_gather_loss=fused))
+        state = algo.init(jax.random.PRNGKey(0), n_clients=C)
+        args = (state, jnp.arange(C), xs, ys, jax.random.PRNGKey(1))
+        return algo.round(*args, mask) if mask is not None else \
+            algo.round(*args)
+
+    head_task = make_stage_task(model, cut=model.n_stages - 1, kind="xent")
+    assert head_task.server_head is not None       # fusion engages
+    for mask in (None, jnp.asarray([1, 1, 1, 1, 0, 0], jnp.float32)):
+        s_off, m_off = drive(head_task, False, mask)
+        s_on, m_on = drive(head_task, True, mask)
+        np.testing.assert_allclose(float(m_on["server_loss"]),
+                                   float(m_off["server_loss"]), atol=1e-6)
+        for a, b in zip(jax.tree.leaves(s_off), jax.tree.leaves(s_on)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32), atol=1e-5)
+
+    deep = mlp(8, [16, 12], 4)                     # 3 stages
+    mid_task = make_stage_task(deep, cut=1, kind="xent")
+    assert mid_task.server_head is None            # multi-stage server
+    s_off, m_off = drive(mid_task, False, None)
+    s_on, m_on = drive(mid_task, True, None)       # knob inert: same path
+    assert float(m_on["server_loss"]) == float(m_off["server_loss"])
+    for a, b in zip(jax.tree.leaves(s_off), jax.tree.leaves(s_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 @pytest.mark.parametrize("shape,step,wd", [((64,), 0, 0.0), ((33, 7), 5, 0.0),

@@ -184,6 +184,111 @@ def test_train_state_shardings_roles(setup):
             assert jax.tree.leaves(sh_off.clients)[0].spec[0] is None
 
 
+# ------------------------------------------------- shard-local resample
+def _n_mesh():
+    """The widest (N, 1) mesh this process can build: 8 under the CI
+    devices8/kernels legs, 1 on the default single-CPU-device run (where
+    the 8-device case is covered by the subprocess golden below)."""
+    n = 8 if jax.device_count() >= 8 else 1
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         devices=jax.devices()[:n])
+
+
+@pytest.mark.kernels
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_shard_local_gather_matches_gspmd_gather(use_kernel):
+    """Tentpole contract: the shard_map-wrapped resample (per-shard
+    index translation + masked cross-shard fixup) is bit-for-bit the
+    plain gather — multi-dim features, pytree labels, both the jnp and
+    the (interpret) Pallas per-shard gather, and both the
+    reduce-scatter (M divides shards) and all-reduce fixups."""
+    from repro.core.feature_store import shard_local_gather
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _n_mesh()
+    rng = np.random.default_rng(7)
+    feats = jnp.asarray(rng.normal(size=(48, 4, 6)), jnp.float32)
+    labels = {"y": jnp.asarray(rng.integers(0, 9, size=(48,)), jnp.int32),
+              "aux": jnp.asarray(rng.normal(size=(48, 3)), jnp.float32)}
+    place = lambda l: jax.device_put(
+        l, NamedSharding(mesh, P("data", *([None] * (l.ndim - 1)))))
+    store = FeatureStore(place(feats), jax.tree.map(place, labels))
+    for m in (16, 13):          # 16 divides 8 shards (scatter), 13 not
+        idx = jnp.asarray(rng.integers(0, 48, size=m), jnp.int32)
+        f_ref, y_ref = gather_batch(store, idx, use_kernel=False)
+        f, y = shard_local_gather(store, idx, mesh, use_kernel=use_kernel)
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(f_ref))
+        for k in y_ref:
+            np.testing.assert_array_equal(np.asarray(y[k]),
+                                          np.asarray(y_ref[k]))
+
+
+@pytest.mark.kernels
+def test_shard_local_round_is_bit_for_bit_and_traces_once():
+    """CycleConfig.shard_local_resample on a mesh must not change a bit
+    of any round output, and the shard_map wrapper must not retrace
+    across varying live cohort sizes (compile-once holds)."""
+    task, xs, ys = _task_and_data()
+    mesh = _n_mesh()
+    base_state, base_rows, _ = _drive("cyclesfl", task, xs, ys, mesh=mesh,
+                                      rounds=5)
+    s, r, traces = _drive("cyclesfl", task, xs, ys, mesh=mesh, rounds=5,
+                          shard_local=True)
+    _assert_equal(base_state, base_rows, s, r, "shard-local cyclesfl")
+    assert traces == 1, (f"shard-local round traced {traces} times — the "
+                         "shard_map wrapper broke compile-once")
+
+
+@pytest.mark.kernels
+def test_meshcheck_shard_local_golden_all_algorithms_8_devices():
+    """The acceptance golden: every registered algorithm, monolithic AND
+    pipelined, on a 1-device and a forced 8-device mesh — shard-local
+    resample bit-for-bit the GSPMD path, trace budget held.  Subprocess
+    because XLA_FLAGS must bind before jax initializes."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.abspath("src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.meshcheck", "--devices", "8",
+         "--shard-local"],
+        capture_output=True, text=True, env=env, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, (
+        f"shard-local meshcheck failed\nstdout: {proc.stdout[-3000:]}\n"
+        f"stderr: {proc.stderr[-3000:]}")
+    report = json.loads(proc.stdout)
+    assert report["ok"] and report["mode"] == "shard_local"
+    for name, rec in report["algos"].items():
+        assert rec["ok"], (name, rec)
+        assert rec["8dev"]["diff"] == 0.0, name
+
+
+def test_inner_loop_resample_use_kernel_override_is_threaded():
+    """Satellite fix: CycleConfig.resample_use_kernel reaches the
+    gather inside server_inner_loop.apply_step (it used to be dropped —
+    gather_batch was always called with defaults), and the forced
+    interpret-kernel path is bit-for-bit the jnp path."""
+    from repro.api import build_algorithm, get_program
+    from repro.core.cyclesl import CycleConfig
+    from repro.optim import adam
+    task, xs, ys = _task_and_data()
+    opt = adam(5e-3)
+
+    def drive(use_kernel):
+        algo = build_algorithm(
+            get_program("cyclesfl"), task, opt, opt,
+            CycleConfig(server_epochs=2, resample_use_kernel=use_kernel))
+        state = algo.init(jax.random.PRNGKey(0), n_clients=C)
+        state, mets = algo.round(state, jnp.arange(C), xs, ys,
+                                 jax.random.PRNGKey(0))
+        return state, mets
+
+    s_jnp, m_jnp = drive(False)
+    s_krn, m_krn = drive(True)
+    _assert_equal(s_jnp, [{k: np.asarray(v) for k, v in m_jnp.items()}],
+                  s_krn, [{k: np.asarray(v) for k, v in m_krn.items()}],
+                  "resample_use_kernel")
+
+
 # ----------------------------------------------------- resample dispatch
 def test_gather_batch_kernel_path_matches_jnp_take():
     """Satellite: the FeatureStore resample gather dispatched through

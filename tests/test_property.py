@@ -13,7 +13,8 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.feature_store import (FeatureStore, gather_batch,
-                                      masked_resample_plan, resample_plan)
+                                      masked_resample_plan, resample_plan,
+                                      shard_slice_indices)
 from repro.kernels import ref
 from repro.models.layers import apply_rope, rmsnorm, rmsnorm_init, softcap
 from repro.optim import adam
@@ -88,6 +89,67 @@ def test_masked_plan_never_selects_padded_rows(mask, epochs, batch, seed):
     n_valid = int(np.asarray(valid).sum())
     np.testing.assert_array_equal(
         np.asarray(ok).sum(axis=-1), n_valid // batch)
+
+
+@pytest.mark.kernels
+@given(shards=st.integers(1, 8), rows=st.integers(1, 16),
+       m=st.integers(1, 32), d=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_shard_index_translation_partitions_global_gather(shards, rows, m,
+                                                          d, seed):
+    """The shard-local resample's index-translation contract: for ANY
+    pool slicing, each global index lands in exactly one shard's slice
+    (the ok masks partition the gather), and the union of shard-local
+    work — masked local gathers summed across shards, exactly the
+    shard_map body's cross-shard fixup — reconstructs
+    ``jnp.take(pool, idx, 0)`` bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    total = shards * rows
+    pool = jnp.asarray(rng.normal(size=(total, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, total, size=m), jnp.int32)
+    claims = np.zeros(m, np.int64)
+    out = jnp.zeros((m, d), jnp.float32)
+    for s in range(shards):
+        local, ok = shard_slice_indices(idx, s, rows)
+        assert bool(jnp.all((local >= 0) & (local < rows)))   # safe index
+        contrib = jnp.where(np.asarray(ok)[:, None],
+                            jnp.take(pool[s * rows:(s + 1) * rows], local,
+                                     axis=0), 0.0)
+        claims += np.asarray(ok, np.int64)
+        out = out + contrib
+    np.testing.assert_array_equal(claims, np.ones(m))          # partition
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.take(pool, idx, axis=0)))
+
+
+@pytest.mark.kernels
+@given(shards=st.integers(1, 8), live_cohorts=st.integers(1, 6),
+       pad_cohorts=st.integers(0, 4), b=st.integers(1, 6),
+       batch=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_masked_plan_padded_rows_never_enter_any_shard(shards, live_cohorts,
+                                                       pad_cohorts, b, batch,
+                                                       seed):
+    """Padded pool rows stay out of the shard-local gather entirely: for
+    random capacities, masks, and shard counts, every index of every
+    VALID step of the masked plan is claimed by exactly one shard and
+    points at a LIVE row — so no shard ever does fixup work for a
+    padded row and no padded row crosses a shard boundary."""
+    total = (live_cohorts + pad_cohorts) * b
+    rows = total // shards
+    if rows * shards != total:      # keep only even slicings (the shard-
+        rows, shards = total, 1     # local path falls back otherwise)
+    valid = jnp.repeat(
+        jnp.concatenate([jnp.ones(live_cohorts), jnp.zeros(pad_cohorts)]), b)
+    batch = min(batch, live_cohorts * b)
+    plan, ok = masked_resample_plan(jax.random.PRNGKey(seed), valid, 2, batch)
+    selected = np.asarray(plan)[np.asarray(ok)].ravel()        # valid steps
+    for g in selected:
+        owners = [s for s in range(shards)
+                  if bool(shard_slice_indices(jnp.asarray([g]), s, rows)[1][0])]
+        assert len(owners) == 1                                 # one shard
+        assert float(valid[int(g)]) > 0                         # live row
 
 
 @given(c=st.integers(1, 5), b=st.integers(1, 8), d=st.integers(1, 8),
