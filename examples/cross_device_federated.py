@@ -8,11 +8,18 @@ Trains two ~hundred-round runs on CPU (a few minutes):
 
   PYTHONPATH=src python examples/cross_device_federated.py \
       --baseline sflv1 --rounds 80
+
+Pass ``--scenario`` to run both algorithms under a churny client
+population (dropouts / stragglers / diurnal availability — see
+``repro.scenario``), e.g.::
+
+  ... --scenario uniform --scenario-dropout 0.2
 """
 import argparse
 from dataclasses import replace
 
 from repro.api import Engine, ExperimentConfig
+from repro.scenario.profiles import ScenarioConfig
 
 
 def main():
@@ -22,19 +29,28 @@ def main():
     ap.add_argument("--rounds", type=int, default=80)
     ap.add_argument("--clients", type=int, default=80)
     ap.add_argument("--alpha", type=float, default=0.5)
+    ScenarioConfig.add_arguments(ap)
     args = ap.parse_args()
 
     cycle_of = {"psl": "cyclepsl", "sglr": "cyclesglr",
                 "sflv1": "cyclesfl", "sflv2": "cyclesfl"}
+    scenario = ScenarioConfig.from_flags(args)
     base_cfg = ExperimentConfig(
         algo=args.baseline, task="image", rounds=args.rounds,
         n_clients=args.clients, alpha=args.alpha, attendance=0.05,
-        eval_every=max(10, args.rounds // 8))
+        eval_every=max(10, args.rounds // 8), scenario=scenario)
     results = {}
     for algo in (args.baseline, cycle_of[args.baseline]):
         print(f"\n=== {algo} ===")
         res = Engine(replace(base_cfg, algo=algo)).run()
         results[algo] = res["history"][-1]
+        if scenario.churns and "telemetry" in res:
+            t = res["telemetry"]
+            print(f"[churn] live_cohort_mean={t['live_cohort_mean']:.1f} "
+                  f"dropped={t['dropped_total']} "
+                  f"(hazard={t['drop_hazard_total']}, "
+                  f"deadline={t['drop_deadline_total']}) "
+                  f"max_lag={t['max_drawn_lag']}")
 
     base, cyc = args.baseline, cycle_of[args.baseline]
     print("\n=== summary ===")

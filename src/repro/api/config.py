@@ -14,6 +14,7 @@ from dataclasses import asdict, dataclass, field, fields, replace
 from typing import Optional
 
 from repro.core.cyclesl import CycleConfig
+from repro.scenario.profiles import ScenarioConfig
 
 
 @dataclass(frozen=True)
@@ -71,6 +72,14 @@ class ExperimentConfig:
     #           axes; client params and the θ_S^t snapshot are stale by
     #           EXACTLY one round, never more
     pipeline_staleness: str = "sync"
+    # --- client-population scenario (repro.scenario) ---
+    # kind='none' (default) is the NULL scenario: no profile stream is
+    # built and the Engine runs its scenario-free path bit-for-bit.
+    # Other kinds fold per-round churn into the existing compile-once
+    # machinery: profile-weighted cohort sampling, mid-round dropouts
+    # zeroing slots in the attendance mask, and straggler lag accounted
+    # against the pipeline_staleness snapshot path.
+    scenario: ScenarioConfig = field(default_factory=ScenarioConfig)
     cycle: CycleConfig = field(default_factory=CycleConfig)
 
     # ---------------------------------------------------------- builders
@@ -87,6 +96,10 @@ class ExperimentConfig:
             # hook as null; tolerate the key so old JSONs still load
             cycle.pop("batch_constraint", None)
             cycle = CycleConfig(**cycle)
+        # pre-scenario configs simply lack the key -> null scenario
+        scenario = d.pop("scenario", {})
+        if not isinstance(scenario, ScenarioConfig):
+            scenario = ScenarioConfig.from_dict(scenario)
         # JSON round-trip turns tuples into lists; normalize back
         if d.get("mesh_shape") is not None:
             d["mesh_shape"] = tuple(int(s) for s in d["mesh_shape"])
@@ -96,7 +109,7 @@ class ExperimentConfig:
         unknown = set(d) - known
         if unknown:
             raise KeyError(f"unknown ExperimentConfig fields: {sorted(unknown)}")
-        return cls(cycle=cycle, **d)
+        return cls(cycle=cycle, scenario=scenario, **d)
 
     def validate(self) -> "ExperimentConfig":
         from repro.api.registry import PROGRAMS
@@ -122,6 +135,15 @@ class ExperimentConfig:
             raise ValueError(
                 f"pipeline_staleness={self.pipeline_staleness!r}: expected "
                 "'sync' or 'async'")
+        self.scenario.validate()
+        if self.scenario.churns and not self.pad_cohorts:
+            # churn zeroes slots in the attendance mask; without padded
+            # cohorts there is no mask to zero (and every distinct live
+            # size would retrace anyway)
+            raise ValueError(
+                f"scenario kind={self.scenario.kind!r} with dropout/"
+                "straggler churn requires pad_cohorts=True (mid-round "
+                "drops ride the compile-once attendance mask)")
         return self
 
     # ------------------------------------------------------------- flags
@@ -183,6 +205,7 @@ class ExperimentConfig:
                         help="sync = barrier mode (bit-for-bit the "
                              "sequential Engine); async = one-round-stale "
                              "extraction overlapped with the server phase")
+        ScenarioConfig.add_arguments(ap)
         return ap
 
     @classmethod
@@ -203,6 +226,7 @@ class ExperimentConfig:
             resume=args.resume,
             pipeline_depth=args.pipeline_depth,
             pipeline_staleness=args.pipeline_staleness,
+            scenario=ScenarioConfig.from_flags(args),
             cycle=CycleConfig(server_epochs=args.server_epochs,
                               server_batch=args.server_batch,
                               grad_clip=args.grad_clip,

@@ -63,6 +63,7 @@ from repro.core.split import SplitTask
 from repro.data.federated import FederatedDataset, sample_cohort
 from repro.launch.mesh import make_engine_mesh
 from repro.optim import adam
+from repro.scenario.profiles import build_profile_stream
 from repro.sharding.specs import batch_spec, train_state_shardings
 
 
@@ -174,22 +175,41 @@ class Engine:
                 program.uses_global_client))
             self.state_shardings = train_state_shardings(
                 a_state, self.mesh, shard_cohort=cfg.shard_cohort)
-        if (cfg.pad_cohorts and cfg.variable_attendance
+        # ---- client-population scenario: the profile stream feeding
+        # per-round attendance weights + drop/lag events.  None for the
+        # null scenario (kind='none') — every scenario branch below is
+        # then skipped and the run is bit-for-bit scenario-free.
+        self.scenario = build_profile_stream(cfg.scenario, fed.n_clients,
+                                             cfg.seed)
+        self._sample_clock = 0            # rounds drawn so far (scenario
+                                          # streams fold this in, resume
+                                          # fast-forwards it)
+        self._telemetry: list[dict] = []  # one row per sampled round
+        # the θ staleness the schedule can realize: async pipelining
+        # carries a snapshot exactly one round old; everything else
+        # delivers fresh params (a straggler's *drawn* lag can exceed
+        # this — its realized lag is capped by the schedule)
+        self._sched_lag = int(cfg.pipeline_depth > 0
+                              and cfg.pipeline_staleness == "async")
+        churns = self.scenario is not None and self.scenario.churns
+        if (cfg.pad_cohorts and (cfg.variable_attendance or churns)
                 and any(getattr(p, "mode", None) == "cycle"
                         for p in program.phases)):
             # the masked inner loop's server batch is static; if it can
             # exceed the smallest possible live pool (min_cohort clients),
-            # a low-attendance round would fill ZERO valid steps and the
-            # server would silently not train that round — reject upfront
+            # a low-attendance or churn-thinned round would fill ZERO
+            # valid steps and the server would silently not train that
+            # round — reject upfront
             sb = cfg.cycle.server_batch or cfg.batch
             if sb > cfg.batch * cfg.min_cohort:
                 raise ValueError(
                     f"cycle.server_batch={sb} can exceed the smallest "
                     f"possible live feature pool (min_cohort={cfg.min_cohort}"
                     f" x batch={cfg.batch} = {cfg.min_cohort * cfg.batch} "
-                    "rows) under variable attendance, which would leave the "
-                    "server inner loop with zero valid steps in sparse "
-                    "rounds; lower cycle.server_batch or raise min_cohort")
+                    "rows) under variable attendance or scenario churn, "
+                    "which would leave the server inner loop with zero "
+                    "valid steps in sparse rounds; lower cycle.server_batch "
+                    "or raise min_cohort")
         self.algo: SLAlgorithm = build_algorithm(
             program, task, opt_s, opt_c, cfg.cycle,
             donate=donate, mesh=self.mesh,
@@ -254,12 +274,26 @@ class Engine:
         return min(max(cfg.min_cohort, cap), n)
 
     def _sample_cohort_ids(self, rng: np.random.Generator):
+        """Draw one round's live cohort, advancing the sample clock.
+
+        Called exactly once per round by both :meth:`sample_round` and
+        :meth:`_replay_sampling`, so the clock (which time-varying
+        scenario streams fold into their attendance weights) stays
+        aligned across resume replays.  The null scenario contributes
+        ``weights=None`` — ``rng.choice`` then takes the exact same
+        draw path as the scenario-free Engine (bit-for-bit cohorts).
+        """
         cfg = self.cfg
+        rnd = self._sample_clock
+        self._sample_clock = rnd + 1
+        weights = (self.scenario.weights(rnd)
+                   if self.scenario is not None else None)
         return sample_cohort(self.fed.n_clients, cfg.attendance, rng,
                              min_cohort=cfg.min_cohort,
                              variable=cfg.variable_attendance,
                              max_cohort=(self.cohort_capacity
-                                         if cfg.pad_cohorts else None))
+                                         if cfg.pad_cohorts else None),
+                             weights=weights)
 
     def _replay_sampling(self, rng: np.random.Generator, rounds: int):
         """Consume exactly the RNG draws ``rounds`` rounds of
@@ -281,18 +315,32 @@ class Engine:
         zeroed batches, and a 0 in the mask — so the jitted round sees
         ONE shape for the whole experiment regardless of live
         attendance.  ``mask`` is ``None`` when padding is disabled.
+
+        Scenario churn rides the same mask: a mid-round dropout (hazard
+        draw, or a straggler whose drawn lag exceeds its staleness
+        bound — a deadline miss) zeroes its LIVE slot, so its features
+        never enter a valid server minibatch and its commit is skipped —
+        exactly the padded-slot machinery, no new trace.  The client's
+        batch is still drawn first, keeping the rng stream identical to
+        a no-churn round.
         """
         cfg = self.cfg
         cap = self.cohort_capacity if cfg.pad_cohorts else None
         cohort = self._sample_cohort_ids(rng)
+        rnd = self._sample_clock - 1       # the round that draw was for
+        live = len(cohort)
         pairs = [self.fed.clients[c].sample_batch(rng, cfg.batch)
                  for c in cohort]
         xs = np.stack([p[0] for p in pairs])
         ys = np.stack([p[1] for p in pairs])
+        row = {"round": rnd, "cohort": live, "live": live, "dropped": 0,
+               "drop_hazard": 0, "drop_deadline": 0, "lag_drawn_max": 0,
+               "realized_lag": 0}
         if cap is None:
+            self._telemetry.append(row)
             return (self._place(cohort), self._place(xs), self._place(ys),
                     None)
-        pad = cap - len(cohort)
+        pad = cap - live
         mask = np.ones(cap, np.float32)
         if pad:
             cohort = np.concatenate(
@@ -302,6 +350,16 @@ class Engine:
             ys = np.concatenate([ys, np.zeros((pad,) + ys.shape[1:],
                                               ys.dtype)])
             mask[-pad:] = 0.0
+        if self.scenario is not None and self.scenario.churns:
+            ev = self.scenario.events(rnd, cohort[:live],
+                                      min_live=cfg.min_cohort)
+            mask[:live] *= ev.keep
+            kept = int(ev.keep.sum())
+            row.update(live=kept, dropped=live - kept,
+                       drop_hazard=ev.hazard_drops,
+                       drop_deadline=ev.deadline_drops,
+                       lag_drawn_max=int(ev.lag.max()) if live else 0)
+        self._telemetry.append(row)
         return (self._place(cohort), self._place(xs), self._place(ys),
                 self._place(mask))
 
@@ -380,6 +438,7 @@ class Engine:
         # first post-resume extract is fresh (lag 0), exactly like the
         # uninterrupted run's warm-up round.
         pipelined = self.pipeline is not None
+        t_tel = len(self._telemetry)     # rows this run will append start here
         stage, stage_src, inputs, max_lag = None, start_round, None, 0
         if pipelined and start_round < cfg.rounds:
             inputs = self.sample_round(rng)
@@ -419,6 +478,13 @@ class Engine:
                     state, metrics = self.algo.round(state, cohort, xs, ys,
                                                      self.round_key(rnd),
                                                      mask)
+            # telemetry rows are appended at sample time (for pipelined
+            # runs that's one round AHEAD of the tail); the θ staleness a
+            # round actually saw is only known here, once its tail ran
+            ti = t_tel + (rnd - start_round)
+            if ti < len(self._telemetry):
+                self._telemetry[ti]["realized_lag"] = (
+                    rnd - stage_src if pipelined else 0)
             if cfg.collect_timing:
                 jax.block_until_ready(metrics["server_loss"])
                 if rnd > start_round:             # skip the compile round
@@ -441,6 +507,18 @@ class Engine:
                 self._emit("on_eval", rnd, loss, mets)
         result = {"algo": self.algo.name, "task": cfg.task,
                   "history": history, "grad_stability": tracker.summary()}
+        tel = self._telemetry[t_tel:]
+        if tel:
+            result["telemetry"] = {
+                "per_round": tel,
+                "live_cohort_mean": float(np.mean([r["live"] for r in tel])),
+                "dropped_total": int(sum(r["dropped"] for r in tel)),
+                "drop_hazard_total": int(sum(r["drop_hazard"] for r in tel)),
+                "drop_deadline_total": int(sum(r["drop_deadline"]
+                                               for r in tel)),
+                "max_realized_lag": max(r["realized_lag"] for r in tel),
+                "max_drawn_lag": max(r["lag_drawn_max"] for r in tel),
+            }
         if start_round:
             result["resumed_from_round"] = start_round
         if cfg.collect_timing:

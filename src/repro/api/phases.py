@@ -103,6 +103,14 @@ class RoundVars:
     ``cohort`` and zeroed ``xs``/``ys``; every phase excludes them from
     pooled/averaged quantities so the padded round is numerically
     identical to an unpadded round over the live slots alone.
+
+    Scenario churn reuses the same contract with one difference: a
+    mid-round dropout zeroes a LIVE slot's mask entry (the slot keeps
+    its real client id and data).  The zero mask alone is sufficient —
+    the slot's pooled rows are invalid before ServerUpdate consumes
+    them, its feature gradients are excluded from masked means, and the
+    Commit scatter/aggregate weighting drops its contribution — so
+    churn needs no new phase logic and no retrace.
     """
     state: TrainState
     cohort: Any                       # [C] int client ids
@@ -128,10 +136,15 @@ class Phase:
 
 def masked_mean(x, mask):
     """Mean over the live cohort slots (all slots when ``mask`` is None).
-    With an all-ones mask this is bit-identical to ``jnp.mean``."""
+    With an all-ones mask this is bit-identical to ``jnp.mean``.  The
+    denominator is floored at 1 so an all-dropped mask (every live slot
+    zeroed by scenario churn — the Engine's min_live revival makes this
+    unreachable in practice) yields 0, not NaN; with >= 1 live slot the
+    floor is inert and the result is bit-identical to the plain ratio."""
     if mask is None:
         return jnp.mean(x)
-    return jnp.sum(jnp.where(mask > 0, x, 0)) / jnp.sum(mask)
+    return (jnp.sum(jnp.where(mask > 0, x, 0))
+            / jnp.maximum(jnp.sum(mask), 1.0))
 
 
 def feat_grad_metrics(fgrads, mask=None) -> dict:

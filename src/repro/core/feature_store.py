@@ -27,12 +27,27 @@ import jax
 import jax.numpy as jnp
 
 
+def valid_from_mask(mask, batch: int) -> jax.Array:
+    """Broadcast a [C] cohort attendance mask to the [C*b] per-row
+    validity mask over the pooled feature axis.
+
+    Zeros may sit ANYWHERE in ``mask`` — trailing padded slots, or live
+    slots zeroed mid-round by scenario churn (dropouts / deadline-missed
+    stragglers) — and the pooled validity inherits that interleaving.
+    :func:`masked_resample_plan` already handles arbitrary interleaved
+    zeros (each row's sort key is a pure function of its index), so a
+    churn-dropped slot's rows are pushed past every live row and never
+    enter a valid server minibatch.
+    """
+    return jnp.repeat(jnp.asarray(mask, jnp.float32), batch)
+
+
 class FeatureStore(NamedTuple):
     """Pooled smashed data: features [T, ...], labels pytree of [T, ...].
 
     ``valid`` is an optional [T] row mask (1.0 = live row, 0.0 = a row
-    contributed by a padded cohort slot); ``None`` means every row is
-    live (the classic unpadded pool).
+    contributed by a padded or churn-dropped cohort slot); ``None``
+    means every row is live (the classic unpadded pool).
     """
     features: jax.Array
     labels: jax.Array
@@ -47,8 +62,7 @@ class FeatureStore(NamedTuple):
         merge = lambda a: a.reshape((-1,) + a.shape[2:])
         valid = None
         if mask is not None:
-            b = feature_batches.shape[1]
-            valid = jnp.repeat(jnp.asarray(mask, jnp.float32), b)
+            valid = valid_from_mask(mask, feature_batches.shape[1])
         return cls(merge(feature_batches), jax.tree.map(merge, label_batches),
                    valid)
 

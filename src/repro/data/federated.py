@@ -62,7 +62,8 @@ class FederatedDataset:
 def sample_cohort(n_clients: int, attendance: float,
                   rng: np.random.Generator, min_cohort: int = 1,
                   variable: bool = False,
-                  max_cohort: int | None = None) -> np.ndarray:
+                  max_cohort: int | None = None,
+                  weights: np.ndarray | None = None) -> np.ndarray:
     """Partial participation: sample distinct attending clients.
 
     ``variable=False`` (the paper's protocol) fixes the cohort size at
@@ -71,6 +72,14 @@ def sample_cohort(n_clients: int, attendance: float,
     ``attendance``, so the per-round size is Binomial(N, attendance) —
     clipped to ``[min_cohort, max_cohort]`` so padded execution has a
     static capacity to pad to.
+
+    ``weights`` (optional, length N, need not be normalized) biases the
+    draw toward more-available clients — scenario streams with
+    time-varying availability (diurnal churn) feed their per-round
+    profile weights here.  ``None`` keeps the uniform draw path:
+    ``rng.choice`` uses a DIFFERENT algorithm when ``p=`` is given, so
+    uniform scenarios must pass ``None`` (not a flat array) to stay
+    bit-for-bit with the scenario-free sampler.
     """
     if variable:
         k = int(rng.binomial(n_clients, attendance))
@@ -79,4 +88,9 @@ def sample_cohort(n_clients: int, attendance: float,
     k = max(min_cohort, k)
     if max_cohort is not None:
         k = min(k, max_cohort)
+    if weights is not None:
+        p = np.asarray(weights, np.float64)
+        p = p / p.sum()
+        return rng.choice(n_clients, size=min(k, n_clients), replace=False,
+                          p=p)
     return rng.choice(n_clients, size=min(k, n_clients), replace=False)

@@ -1,0 +1,21 @@
+"""repro.scenario — client-population scenarios for the sharded Engine.
+
+* :mod:`repro.scenario.profiles` — ``ClientProfile`` / ``ScenarioConfig``
+  + the deterministic ``ProfileStream`` churn generators (uniform,
+  pareto-straggler, diurnal-churn).
+* :mod:`repro.scenario.population` — the population simulator: N (100k+)
+  lazily-materialized synthetic clients driving one sharded server
+  (import it directly; it pulls in ``repro.api``).
+"""
+from repro.scenario.profiles import (STREAMS, ClientProfile,
+                                     DiurnalChurnStream,
+                                     ParetoStragglerStream, ProfileStream,
+                                     RoundEvents, ScenarioConfig,
+                                     UniformStream, build_profile_stream,
+                                     scenario_kinds)
+
+__all__ = [
+    "ClientProfile", "ScenarioConfig", "ProfileStream", "RoundEvents",
+    "UniformStream", "ParetoStragglerStream", "DiurnalChurnStream",
+    "STREAMS", "build_profile_stream", "scenario_kinds",
+]

@@ -253,6 +253,73 @@ ENTRY %main (p0: f32[128,8]) -> f32[128,8] {
     assert stats.bytes_by_kind["all-reduce"] == 128 * 8 * 4
 
 
+@given(kind=st.sampled_from(["uniform", "pareto-straggler", "diurnal-churn"]),
+       n=st.integers(4, 60), c=st.integers(1, 12),
+       dropout=st.floats(0.0, 0.9), straggler=st.floats(0.0, 3.0),
+       rounds=st.lists(st.integers(0, 500), min_size=1, max_size=6),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_profile_stream_deterministic_under_replay(kind, n, c, dropout,
+                                                   straggler, rounds, seed):
+    """Every stream draw is a pure fold-in of (seed, salt, round): two
+    independently-built streams agree on profiles, weights, and events
+    for ANY round query order — the property that lets resume skip
+    event replay entirely."""
+    from repro.scenario.profiles import ScenarioConfig, build_profile_stream
+    cfg = ScenarioConfig(kind=kind, dropout=dropout, straggler=straggler)
+    a = build_profile_stream(cfg, n, seed)
+    b = build_profile_stream(cfg, n, seed)
+    rng = np.random.default_rng(seed)
+    cohort = rng.choice(n, size=min(c, n), replace=False)
+    for rnd in rounds + rounds[::-1]:          # out-of-order + repeated
+        ea = a.events(rnd, cohort, min_live=1)
+        eb = b.events(rnd, cohort, min_live=1)
+        np.testing.assert_array_equal(ea.keep, eb.keep)
+        np.testing.assert_array_equal(ea.lag, eb.lag)
+        assert (ea.hazard_drops, ea.deadline_drops) == \
+            (eb.hazard_drops, eb.deadline_drops)
+        wa, wb = a.weights(rnd), b.weights(rnd)
+        assert (wa is None) == (wb is None)
+        if wa is not None:
+            np.testing.assert_array_equal(wa, wb)
+        assert ea.keep.sum() >= 1              # min_live revival floor
+    assert a.profile(int(cohort[0])) == b.profile(int(cohort[0]))
+
+
+@given(live=st.integers(2, 16), pad=st.integers(0, 8),
+       b=st.integers(1, 6), batch=st.integers(1, 8),
+       dropout=st.floats(0.1, 0.9), rnd=st.integers(0, 200),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_dropped_slot_features_never_reach_server_minibatch(live, pad, b,
+                                                            batch, dropout,
+                                                            rnd, seed):
+    """End-to-end churn invariant over the Engine's exact dataflow:
+    stream events -> attendance mask x keep -> pooled row validity ->
+    masked resample plan.  Every row of every VALID server step maps to
+    a slot that both attended (not padding) and survived the round."""
+    from repro.core.feature_store import valid_from_mask
+    from repro.scenario.profiles import ScenarioConfig, build_profile_stream
+    n = live * 4
+    stream = build_profile_stream(
+        ScenarioConfig(kind="uniform", dropout=dropout), n, seed)
+    cohort = np.random.default_rng(seed).choice(n, size=live, replace=False)
+    ev = stream.events(rnd, cohort, min_live=1)
+    mask = np.concatenate([np.ones(live, np.float32),
+                           np.zeros(pad, np.float32)])
+    mask[:live] *= ev.keep                     # mid-round drops, in place
+    batch = min(batch, max(1, int(mask.sum()) * b))
+    valid = valid_from_mask(jnp.asarray(mask), b)
+    plan, ok = masked_resample_plan(jax.random.PRNGKey(seed), valid, 2, batch)
+    selected = np.asarray(plan)[np.asarray(ok)].ravel()
+    slots = selected // b                      # pooled row -> cohort slot
+    assert slots.size == 0 or mask[slots].min() > 0
+    # accounting: valid steps cover exactly the surviving rows' worth
+    n_valid = int(mask.sum()) * b
+    np.testing.assert_array_equal(np.asarray(ok).sum(axis=-1),
+                                  n_valid // batch)
+
+
 @given(c=st.integers(2, 6), seed=st.integers(0, 100))
 @settings(max_examples=10, deadline=None)
 def test_client_phase_is_cohort_permutation_equivariant(c, seed):

@@ -1,0 +1,267 @@
+"""repro.scenario: churn streams, the null-scenario equivalence golden,
+the compile-once-under-churn contract, and the population simulator.
+
+The load-bearing guarantees:
+
+1. **Null scenario == scenario-free, bit-for-bit, every algorithm.**
+   ``kind='none'`` builds no stream; a zero-churn ``uniform`` stream is
+   also structurally inert (``weights=None``, no event draws), so both
+   must reproduce the scenario-free Engine's history exactly.
+2. **Churn is data, not shapes.**  Dropout/straggler events ride the
+   compile-once attendance mask — one trace per (algo, config) no
+   matter how the live cohort varies round to round.
+3. **The server_batch guard fires** under variable attendance AND under
+   scenario churn (both can shrink the live feature pool below a static
+   server batch).
+4. **Configs round-trip** through to_dict/from_dict and the flag parser.
+5. **The population simulator scales by cohort, not fleet**: a run over
+   a 100k-virtual-client federation materializes only the clients that
+   attended.
+"""
+import argparse
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.api import PROGRAMS, Engine, ExperimentConfig
+from repro.core.cyclesl import CycleConfig
+from repro.core.split import make_stage_task
+from repro.data.federated import FederatedDataset, sample_cohort
+from repro.models.cnn import mlp
+from repro.scenario.profiles import (STREAMS, ScenarioConfig,
+                                     build_profile_stream, scenario_kinds)
+
+N, ROUNDS = 24, 3
+
+
+def _fed(n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n * 12, 8)).astype(np.float32)
+    w = rng.normal(size=(8, 4))
+    y = np.argmax(x @ w, axis=-1)
+    idx = np.arange(len(x)).reshape(n, -1)
+    return FederatedDataset.from_arrays(x, y, list(idx), seed=seed)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return make_stage_task(mlp(8, [8], 4), cut=1, kind="xent"), _fed()
+
+
+def _cfg(**kw):
+    base = dict(algo="cyclesfl", rounds=ROUNDS, n_clients=N, attendance=0.25,
+                min_cohort=2, batch=4, width=8, cut=1, seed=0,
+                eval_every=ROUNDS)
+    base.update(kw)
+    return ExperimentConfig(**base)
+
+
+def _run(cfg, task, fed):
+    res = Engine(cfg, task=task, fed=fed, metric_key="accuracy",
+                 log=lambda *a, **k: None).run()
+    # wall-clock differs run to run; everything else must not
+    res["history"] = [{k: v for k, v in row.items() if k != "elapsed_s"}
+                      for row in res["history"]]
+    return res
+
+
+# ------------------------------------------------- null-scenario golden
+@pytest.mark.parametrize("name", sorted(PROGRAMS))
+def test_null_scenario_bit_for_bit(name, setup):
+    """kind='none' and a zero-churn uniform stream both reproduce the
+    scenario-free run exactly, for every registered algorithm."""
+    task, fed = setup
+    base = _cfg(algo=name)
+    r0 = _run(base, task, fed)
+    r1 = _run(replace(base, scenario=ScenarioConfig(kind="none")), task, fed)
+    r2 = _run(replace(base, scenario=ScenarioConfig(kind="uniform")),
+              task, fed)
+    assert r0["history"] == r1["history"], name
+    assert r0["history"] == r2["history"], name
+
+
+def test_null_scenario_builds_no_stream():
+    assert build_profile_stream(ScenarioConfig(), 10, 0) is None
+    assert build_profile_stream(ScenarioConfig(kind="uniform"), 10, 0) \
+        .weights(0) is None
+
+
+# --------------------------------------------- churn: one trace, masked
+@pytest.mark.parametrize("kind", sorted(STREAMS))
+def test_churn_compiles_once(kind, setup):
+    """Varying per-round drops/lags (and, for diurnal, weighted cohort
+    draws) never retrace the jitted round."""
+    task, fed = setup
+    cfg = _cfg(variable_attendance=True,
+               scenario=ScenarioConfig(kind=kind, dropout=0.3,
+                                       straggler=1.0))
+    eng = Engine(cfg, task=task, fed=fed, metric_key="accuracy",
+                 log=lambda *a, **k: None)
+    res = eng.run()
+    assert eng.algo.trace_count == 1
+    tel = res["telemetry"]
+    assert len(tel["per_round"]) == ROUNDS
+    assert tel["dropped_total"] > 0                    # churn actually bit
+    assert all(r["live"] >= 1 for r in tel["per_round"])
+    assert all(r["live"] + r["dropped"] == r["cohort"]
+               for r in tel["per_round"])
+    assert tel["max_realized_lag"] == 0                # sequential schedule
+
+
+def test_churn_with_pipelined_async(setup):
+    """Stragglers under the async pipeline: realized lag is capped at
+    the schedule's one-round-stale snapshot, drawn lag is unbounded."""
+    task, fed = setup
+    cfg = _cfg(pipeline_depth=1, pipeline_staleness="async",
+               scenario=ScenarioConfig(kind="pareto-straggler",
+                                       straggler=2.0, staleness_bound=2))
+    eng = Engine(cfg, task=task, fed=fed, metric_key="accuracy",
+                 log=lambda *a, **k: None)
+    res = eng.run()
+    tel = res["telemetry"]
+    assert 0 <= tel["max_realized_lag"] <= 1
+    assert eng.pipeline.extract_traces == 1
+    assert eng.pipeline.tail_traces == 1
+
+
+def test_dropped_slots_zero_the_mask(setup):
+    """sample_round under churn: every dropped LIVE slot reads 0 in the
+    attendance mask while keeping its real client id (the commit path
+    then writes its entity back unchanged)."""
+    task, fed = setup
+    cfg = _cfg(scenario=ScenarioConfig(kind="uniform", dropout=0.5))
+    eng = Engine(cfg, task=task, fed=fed, metric_key="accuracy",
+                 log=lambda *a, **k: None)
+    rng = np.random.default_rng(cfg.seed + 1)
+    saw_drop = False
+    for _ in range(6):
+        cohort, xs, ys, mask = eng.sample_round(rng)
+        row = eng._telemetry[-1]
+        mask = np.asarray(mask)
+        cohort = np.asarray(cohort)
+        live = row["cohort"]
+        assert int(mask[:live].sum()) == row["live"]
+        assert (cohort[:live] < N).all()               # real ids, not sentinel
+        assert mask[:live].sum() >= min(cfg.min_cohort, live)
+        saw_drop |= row["dropped"] > 0
+    assert saw_drop
+
+
+def test_diurnal_weights_bias_cohorts():
+    """Weighted sampling draws high-availability clients more often."""
+    sc = ScenarioConfig(kind="diurnal-churn", dropout=0.1, amplitude=0.9)
+    stream = build_profile_stream(sc, 200, seed=3)
+    w = stream.weights(0)
+    assert w.shape == (200,) and abs(w.sum() - 1.0) < 1e-9
+    rng = np.random.default_rng(0)
+    counts = np.zeros(200)
+    for _ in range(300):
+        counts[sample_cohort(200, 0.1, rng, weights=w)] += 1
+    hi, lo = np.argsort(w)[-50:], np.argsort(w)[:50]
+    assert counts[hi].mean() > counts[lo].mean()
+
+
+# ----------------------------------------------------- guard regressions
+def test_server_batch_guard_variable_attendance(setup):
+    """The pre-existing guard: variable attendance + a static server
+    batch larger than the smallest possible live pool must raise."""
+    task, fed = setup
+    cfg = _cfg(variable_attendance=True,
+               cycle=CycleConfig(server_batch=64))
+    with pytest.raises(ValueError, match="server_batch"):
+        Engine(cfg, task=task, fed=fed, log=lambda *a, **k: None)
+
+
+def test_server_batch_guard_scenario_churn(setup):
+    """Scenario churn can shrink the live pool even at FIXED attendance,
+    so the same guard must fire for a churny scenario."""
+    task, fed = setup
+    cfg = _cfg(scenario=ScenarioConfig(kind="uniform", dropout=0.2),
+               cycle=CycleConfig(server_batch=64))
+    with pytest.raises(ValueError, match="server_batch"):
+        Engine(cfg, task=task, fed=fed, log=lambda *a, **k: None)
+    # ...but a null/zero-churn scenario at fixed attendance is fine
+    Engine(_cfg(cycle=CycleConfig(server_batch=64)), task=task, fed=fed,
+           log=lambda *a, **k: None)
+
+
+def test_churn_requires_padded_cohorts():
+    cfg = _cfg(pad_cohorts=False,
+               scenario=ScenarioConfig(kind="uniform", dropout=0.2))
+    with pytest.raises(ValueError, match="pad_cohorts"):
+        cfg.validate()
+
+
+# --------------------------------------------------------- serialization
+def test_scenario_config_round_trip():
+    sc = ScenarioConfig(kind="diurnal-churn", dropout=0.1, straggler=0.5,
+                        staleness_bound=3, period=24, amplitude=0.5, seed=7)
+    assert ScenarioConfig.from_dict(sc.to_dict()) == sc
+    with pytest.raises(KeyError, match="unknown"):
+        ScenarioConfig.from_dict({"kind": "uniform", "nope": 1})
+    with pytest.raises(KeyError, match="unknown scenario kind"):
+        ScenarioConfig(kind="wat").validate()
+
+
+def test_experiment_config_scenario_round_trip():
+    cfg = ExperimentConfig(
+        scenario=ScenarioConfig(kind="pareto-straggler", straggler=1.5))
+    back = ExperimentConfig.from_dict(cfg.to_dict())
+    assert back == cfg
+    assert isinstance(back.scenario, ScenarioConfig)
+    # pre-scenario JSONs (no key) load as the null scenario
+    d = cfg.to_dict()
+    del d["scenario"]
+    assert ExperimentConfig.from_dict(d).scenario == ScenarioConfig()
+
+
+def test_scenario_from_flags_round_trip():
+    ap = ExperimentConfig.add_arguments(argparse.ArgumentParser())
+    args = ap.parse_args([
+        "--scenario", "diurnal-churn", "--scenario-dropout", "0.2",
+        "--scenario-straggler", "0.5", "--scenario-staleness-bound", "2",
+        "--scenario-period", "24", "--scenario-amplitude", "0.4",
+        "--scenario-seed", "9"])
+    cfg = ExperimentConfig.from_flags(args)
+    assert cfg.scenario == ScenarioConfig(
+        kind="diurnal-churn", dropout=0.2, straggler=0.5, staleness_bound=2,
+        period=24, amplitude=0.4, seed=9)
+    assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
+
+
+def test_scenario_kinds_registry():
+    assert scenario_kinds()[0] == "none"
+    assert set(scenario_kinds()[1:]) == set(STREAMS)
+
+
+# ----------------------------------------------------------- population
+def test_population_simulator_smoke():
+    """100k virtual clients, one small server: the run touches only the
+    cohorts that attended, compiles once, and reports churn telemetry."""
+    from repro.scenario.population import PopulationSpec, run_population
+    spec = PopulationSpec(n_clients=100_000, test_size=256)
+    res = run_population(spec, ScenarioConfig(kind="uniform", dropout=0.2),
+                         cohort=8, rounds=3, batch=4, width=8)
+    pop = res["population"]
+    assert pop["n_clients"] == 100_000
+    assert pop["trace_count"] == 1
+    assert pop["clients_materialized"] <= 8 * 3
+    assert res["telemetry"]["dropped_total"] >= 0
+    assert res["history"][-1]["accuracy"] > 0
+
+
+def test_population_lazy_and_deterministic():
+    from repro.scenario.population import PopulationFed, PopulationSpec
+    spec = PopulationSpec(n_clients=50_000, samples_per_client=12, seed=4)
+    fed_a, fed_b = PopulationFed(spec), PopulationFed(spec)
+    assert fed_a.n_clients == 50_000 and fed_a.materialized == 0
+    c = fed_a.materialize(31_337)
+    np.testing.assert_array_equal(c.x_train,
+                                  fed_b.materialize(31_337).x_train)
+    assert fed_a.materialized == 1
+    assert len(c.x_train) + len(c.x_test) == 12
+    xa, ya = fed_a.test_arrays()
+    xb, _ = fed_b.test_arrays()
+    np.testing.assert_array_equal(xa, xb)
+    assert len(xa) == spec.test_size and len(ya) == spec.test_size
