@@ -14,11 +14,18 @@ population (dropouts / stragglers / diurnal availability — see
 ``repro.scenario``), e.g.::
 
   ... --scenario uniform --scenario-dropout 0.2
+
+Pass ``--guard`` (and optionally ``--faults``) to arm the resilience
+runtime: in-trace NaN/spike health guards plus the recovery policies
+(quarantine / retry / rollback — see ``repro.resilience``), e.g.::
+
+  ... --guard --faults nan=0.1,persist=9 --on-nonfinite quarantine
 """
 import argparse
 from dataclasses import replace
 
 from repro.api import Engine, ExperimentConfig
+from repro.resilience import ResilienceConfig
 from repro.scenario.profiles import ScenarioConfig
 
 
@@ -30,15 +37,18 @@ def main():
     ap.add_argument("--clients", type=int, default=80)
     ap.add_argument("--alpha", type=float, default=0.5)
     ScenarioConfig.add_arguments(ap)
+    ResilienceConfig.add_arguments(ap)
     args = ap.parse_args()
 
     cycle_of = {"psl": "cyclepsl", "sglr": "cyclesglr",
                 "sflv1": "cyclesfl", "sflv2": "cyclesfl"}
     scenario = ScenarioConfig.from_flags(args)
+    resilience = ResilienceConfig.from_flags(args)
     base_cfg = ExperimentConfig(
         algo=args.baseline, task="image", rounds=args.rounds,
         n_clients=args.clients, alpha=args.alpha, attendance=0.05,
-        eval_every=max(10, args.rounds // 8), scenario=scenario)
+        eval_every=max(10, args.rounds // 8), scenario=scenario,
+        resilience=resilience)
     results = {}
     for algo in (args.baseline, cycle_of[args.baseline]):
         print(f"\n=== {algo} ===")
@@ -51,6 +61,12 @@ def main():
                   f"(hazard={t['drop_hazard_total']}, "
                   f"deadline={t['drop_deadline_total']}) "
                   f"max_lag={t['max_drawn_lag']}")
+        if "resilience" in res:
+            r = res["resilience"]
+            print(f"[resilience] faulted_rounds={r['faulted_rounds']} "
+                  f"retries={r['retries']} rollbacks={r['rollbacks']} "
+                  f"quarantined={r['quarantined_clients']} "
+                  f"ckpt_corruptions={r['ckpt_corruptions']}")
 
     base, cyc = args.baseline, cycle_of[args.baseline]
     print("\n=== summary ===")

@@ -14,6 +14,7 @@ from dataclasses import asdict, dataclass, field, fields, replace
 from typing import Optional
 
 from repro.core.cyclesl import CycleConfig
+from repro.resilience.config import ResilienceConfig
 from repro.scenario.profiles import ScenarioConfig
 
 
@@ -80,6 +81,13 @@ class ExperimentConfig:
     # zeroing slots in the attendance mask, and straggler lag accounted
     # against the pipeline_staleness snapshot path.
     scenario: ScenarioConfig = field(default_factory=ScenarioConfig)
+    # --- fault-tolerant runtime (repro.resilience) ---
+    # the default (guard off, no faults) is the NULL config: no guard
+    # phase is compiled, no recovery controller is built, and the Engine
+    # runs its guard-free path bit-for-bit.  guard=True folds NaN/Inf +
+    # loss-spike checks into the compiled round and arms the per-fault
+    # recovery policies (quarantine / retry / rollback).
+    resilience: ResilienceConfig = field(default_factory=ResilienceConfig)
     cycle: CycleConfig = field(default_factory=CycleConfig)
 
     # ---------------------------------------------------------- builders
@@ -100,6 +108,10 @@ class ExperimentConfig:
         scenario = d.pop("scenario", {})
         if not isinstance(scenario, ScenarioConfig):
             scenario = ScenarioConfig.from_dict(scenario)
+        # pre-resilience configs simply lack the key -> null resilience
+        resilience = d.pop("resilience", {})
+        if not isinstance(resilience, ResilienceConfig):
+            resilience = ResilienceConfig.from_dict(resilience)
         # JSON round-trip turns tuples into lists; normalize back
         if d.get("mesh_shape") is not None:
             d["mesh_shape"] = tuple(int(s) for s in d["mesh_shape"])
@@ -109,7 +121,7 @@ class ExperimentConfig:
         unknown = set(d) - known
         if unknown:
             raise KeyError(f"unknown ExperimentConfig fields: {sorted(unknown)}")
-        return cls(cycle=cycle, scenario=scenario, **d)
+        return cls(cycle=cycle, scenario=scenario, resilience=resilience, **d)
 
     def validate(self) -> "ExperimentConfig":
         from repro.api.registry import PROGRAMS
@@ -144,6 +156,13 @@ class ExperimentConfig:
                 f"scenario kind={self.scenario.kind!r} with dropout/"
                 "straggler churn requires pad_cohorts=True (mid-round "
                 "drops ride the compile-once attendance mask)")
+        self.resilience.validate()
+        if self.resilience.quarantines and not self.pad_cohorts:
+            # quarantine zeroes blamed slots in the attendance mask —
+            # same machinery, same requirement as scenario churn
+            raise ValueError(
+                "resilience quarantine policy requires pad_cohorts=True "
+                "(slot quarantine rides the compile-once attendance mask)")
         return self
 
     # ------------------------------------------------------------- flags
@@ -206,6 +225,7 @@ class ExperimentConfig:
                              "sequential Engine); async = one-round-stale "
                              "extraction overlapped with the server phase")
         ScenarioConfig.add_arguments(ap)
+        ResilienceConfig.add_arguments(ap)
         return ap
 
     @classmethod
@@ -227,6 +247,7 @@ class ExperimentConfig:
             pipeline_depth=args.pipeline_depth,
             pipeline_staleness=args.pipeline_staleness,
             scenario=ScenarioConfig.from_flags(args),
+            resilience=ResilienceConfig.from_flags(args),
             cycle=CycleConfig(server_epochs=args.server_epochs,
                               server_batch=args.server_batch,
                               grad_clip=args.grad_clip,

@@ -63,6 +63,9 @@ from repro.core.split import SplitTask
 from repro.data.federated import FederatedDataset, sample_cohort
 from repro.launch.mesh import make_engine_mesh
 from repro.optim import adam
+from repro.resilience import (HEALTH_EMA, HEALTH_NONFINITE, HEALTH_SPIKE,
+                              FaultInjectedError, RecoveryController,
+                              ResilienceExhaustedError, build_fault_stream)
 from repro.scenario.profiles import build_profile_stream
 from repro.sharding.specs import batch_spec, train_state_shardings
 
@@ -158,6 +161,18 @@ class Engine:
         if donate is None:
             # buffer donation is a no-op XLA warning on CPU; enable elsewhere
             donate = jax.default_backend() != "cpu"
+        # ---- fault-tolerant runtime: the deterministic fault stream and
+        # (per-run) recovery controller.  The null ResilienceConfig
+        # builds neither and changes nothing downstream.  With recovery
+        # active the TrainState buffers are NEVER donated — the pre-round
+        # state and the snapshot ring must outlive every dispatch so a
+        # faulted round can re-run from them.
+        self.faults = build_fault_stream(cfg.resilience.faults, cfg.seed)
+        self.recovery: Optional[RecoveryController] = None
+        self._ema = None                  # loss-EMA carry (device scalar)
+        self._ckpt_corruptions = 0
+        if cfg.resilience.active:
+            donate = False
         program = get_program(cfg.algo)
         opt_s, opt_c = adam(cfg.lr_server), adam(cfg.lr_client)
         # ---- mesh-native execution: build the mesh ONCE, derive the
@@ -214,7 +229,8 @@ class Engine:
             program, task, opt_s, opt_c, cfg.cycle,
             donate=donate, mesh=self.mesh,
             state_shardings=self.state_shardings,
-            shard_data=cfg.shard_cohort)
+            shard_data=cfg.shard_cohort,
+            resilience=cfg.resilience)
         # ---- pipelined rounds: compile the (extract, tail) dispatch
         # pair so cohort k+1's feature extraction can be in flight while
         # cohort k's server phase runs.  None for the fused sequential
@@ -230,7 +246,8 @@ class Engine:
                 donate=donate,
                 donate_state=(cfg.pipeline_staleness == "sync"),
                 mesh=self.mesh, state_shardings=self.state_shardings,
-                shard_data=cfg.shard_cohort)
+                shard_data=cfg.shard_cohort,
+                resilience=cfg.resilience)
 
     # ------------------------------------------------------------ state
     def init_state(self) -> TrainState:
@@ -288,6 +305,11 @@ class Engine:
         self._sample_clock = rnd + 1
         weights = (self.scenario.weights(rnd)
                    if self.scenario is not None else None)
+        if self.recovery is not None:
+            # quarantined clients draw weight 0 from here on; with no
+            # quarantines this is a strict pass-through (None stays None,
+            # so the null path keeps the exact scenario-free rng draws)
+            weights = self.recovery.sampling_weights(weights)
         return sample_cohort(self.fed.n_clients, cfg.attendance, rng,
                              min_cohort=cfg.min_cohort,
                              variable=cfg.variable_attendance,
@@ -409,14 +431,167 @@ class Engine:
     def _tail(self, state, inputs, stage, key):
         """Dispatch the ServerUpdate..Commit tail consuming ``stage``."""
         cohort, xs, ys, mask = inputs
+        if self.cfg.resilience.guard:
+            # guard-on rounds ALWAYS thread the EMA carry, so the tail
+            # compiles once with the health phase folded in
+            return self.pipeline.tail(state, cohort, xs, ys, key, stage,
+                                      mask, self._ema)
         if mask is None:
             return self.pipeline.tail(state, cohort, xs, ys, key, stage)
         return self.pipeline.tail(state, cohort, xs, ys, key, stage, mask)
+
+    def _round_call(self, state, inputs, key):
+        """Dispatch the monolithic round (guard-off calls keep the exact
+        historical signature, so the trace is bit-for-bit unchanged)."""
+        cohort, xs, ys, mask = inputs
+        if self.cfg.resilience.guard:
+            return self.algo.round(state, cohort, xs, ys, key, mask,
+                                   self._ema)
+        if mask is None:
+            return self.algo.round(state, cohort, xs, ys, key)
+        return self.algo.round(state, cohort, xs, ys, key, mask)
+
+    # ------------------------------------------------------- resilience
+    def _inject_nan(self, inputs, rnd: int, attempt: int):
+        """Fault hook: poison the drawn cohort's input batches with NaN
+        per the deterministic stream (no-op without one)."""
+        if self.faults is None or inputs is None:
+            return inputs
+        cohort, xs, ys, mask = inputs
+        if not jnp.issubdtype(jnp.asarray(xs).dtype, jnp.inexact):
+            return inputs
+        live = int((np.asarray(cohort) < self.fed.n_clients).sum())
+        slots = self.faults.nan_slots_for(rnd, attempt, live)
+        if slots.size == 0:
+            return inputs
+        xs = self._place(jnp.asarray(xs).at[jnp.asarray(slots)]
+                         .set(jnp.nan))
+        self.log(f"[resilience] round {rnd} attempt {attempt}: injected "
+                 f"NaN features in slots {slots.tolist()}")
+        return (cohort, xs, ys, mask)
+
+    def _verdict(self, metrics) -> Optional[str]:
+        """Host-read the packed health vector — the ONE sync the guard
+        costs per round.  Returns the fault kind or None (healthy)."""
+        if not self.cfg.resilience.guard:
+            return None
+        h = np.asarray(metrics["health"])
+        if h[HEALTH_NONFINITE] > 0:
+            return "nonfinite"
+        if h[HEALTH_SPIKE] > 0 and self.recovery.spike_armed():
+            return "spike"
+        return None
+
+    def _recover_round(self, state, inputs, inj0, rnd: int, stage=None,
+                       pipelined: bool = False):
+        """Drive round ``rnd`` to an accepted ``(state, metrics)`` under
+        the recovery policy.
+
+        ``inputs`` are the CLEAN sampled round inputs; ``inj0`` the
+        attempt-0 fault-injected view of them (identical objects when no
+        fault fired).  ``stage`` is the already-dispatched extract for
+        ``inj0`` on the pipelined path — recovery attempts re-extract
+        from the current candidate state, because the pooled store bakes
+        the attendance mask in at extract time.
+
+        Returns ``(state, metrics, attempts, healthy)``; raises
+        :class:`ResilienceExhaustedError` past ``max_retries`` and lets
+        an injected error escape unhandled only when every fallback
+        action is exhausted.
+        """
+        ctl, rcfg = self.recovery, self.cfg.resilience
+        key = self.round_key(rnd)
+        cur_state, cur_inputs, cur_inj, cur_stage = state, inputs, inj0, stage
+        kinds: list[str] = []
+        actions: list[str] = []
+        attempt = 0
+        while True:
+            site = ("extract" if pipelined and cur_stage is None
+                    else ("tail" if pipelined else "round"))
+            try:
+                if self.faults is not None:
+                    self.faults.check_dispatch(rnd, attempt, site)
+                if pipelined:
+                    st = (cur_stage if cur_stage is not None
+                          else self._extract(cur_state, cur_inj))
+                    new_state, metrics = self._tail(cur_state, cur_inj,
+                                                    st, key)
+                else:
+                    new_state, metrics = self._round_call(cur_state,
+                                                          cur_inj, key)
+                kind = self._verdict(metrics)
+            except FaultInjectedError as e:
+                self.log(f"[resilience] {e}")
+                kind, new_state, metrics = "error", None, None
+            if kind is None:
+                break                      # healthy — accept
+            kinds.append(kind)
+            if len(kinds) > rcfg.max_retries:
+                ctl.record_round(rnd, len(kinds), kinds, actions,
+                                 len(ctl.quarantined))
+                raise ResilienceExhaustedError(rnd, len(kinds), kinds)
+            # resolve the configured action, escalating past the ones
+            # that cannot apply (no blamable slot, empty snapshot ring)
+            action = ctl.action_for(kind, attempt)
+            applied = None
+            while applied is None:
+                if action == "ignore" and new_state is not None:
+                    applied = "ignore"
+                elif action == "quarantine":
+                    mask = cur_inputs[3]
+                    sb = (metrics.get("health_slot_bad")
+                          if metrics is not None else None)
+                    nm = (ctl.quarantine(np.asarray(cur_inputs[0]),
+                                         np.asarray(mask), np.asarray(sb))
+                          if mask is not None and sb is not None else None)
+                    if nm is not None:
+                        placed = self._place(nm)
+                        cur_inputs = cur_inputs[:3] + (placed,)
+                        cur_inj = cur_inj[:3] + (placed,)
+                        applied = "quarantine"
+                elif action == "retry":
+                    applied = "retry"
+                elif action == "rollback":
+                    tgt = ctl.rollback()
+                    if tgt is not None:
+                        _, cur_state, self._ema = tgt
+                        applied = "rollback"
+                if applied is None:
+                    nxt = ctl.escalate(action) if action else None
+                    if nxt is None:
+                        applied = "retry"  # last resort
+                    else:
+                        action = nxt
+            actions.append(applied)
+            if applied == "ignore":
+                self.log(f"[resilience] round {rnd}: {kind} ignored "
+                         "by policy")
+                break
+            self.log(f"[resilience] round {rnd}: {kind} -> {applied} "
+                     f"(attempt {len(kinds)}/{rcfg.max_retries})")
+            ctl.backoff(len(kinds))
+            attempt += 1
+            cur_stage = None               # stale: mask/state may differ
+            cur_inj = self._inject_nan(cur_inputs, rnd, attempt)
+        healthy = kind is None
+        ctl.record_round(rnd, len(kinds), kinds, actions,
+                         len(ctl.quarantined))
+        return new_state, metrics, len(kinds), healthy
 
     # -------------------------------------------------------------- run
     def run(self, state: Optional[TrainState] = None) -> dict:
         cfg = self.cfg
         rng = np.random.default_rng(cfg.seed + 1)
+        if cfg.resilience.active:
+            # fresh controller per run: empty quarantine ledger, empty
+            # snapshot ring, EMA at the unarmed sentinel.  Built BEFORE
+            # any sampling so resume replays see the same (empty) ledger
+            # the original run started with.
+            self.recovery = RecoveryController(
+                cfg.resilience, self.fed.n_clients,
+                min_live=cfg.min_cohort, log=self.log)
+            self._ema = jnp.zeros((), jnp.float32)
+            self._ckpt_corruptions = 0
         start_round = 0
         if state is None and cfg.resume:
             state, start_round = self.restore(rng)
@@ -439,16 +614,24 @@ class Engine:
         # uninterrupted run's warm-up round.
         pipelined = self.pipeline is not None
         t_tel = len(self._telemetry)     # rows this run will append start here
-        stage, stage_src, inputs, max_lag = None, start_round, None, 0
+        stage, stage_src, inputs, inj_inputs, max_lag = \
+            None, start_round, None, None, 0
         if pipelined and start_round < cfg.rounds:
             inputs = self.sample_round(rng)
-            stage = self._extract(state, inputs)
+            # attempt-0 fault injection happens BEFORE the priming
+            # extract so a poisoned delivery flows into the stage's
+            # features (no-op without a fault stream)
+            inj_inputs = self._inject_nan(inputs, start_round, 0)
+            stage = self._extract(state, inj_inputs)
         for rnd in range(start_round, cfg.rounds):
+            attempts, healthy = 0, True
             if pipelined:
                 # prefetch cohort k+1's sampling while round k's compute
                 # is (or is about to be) on the devices
                 nxt_inputs = (self.sample_round(rng)
                               if rnd + 1 < cfg.rounds else None)
+                nxt_inj = (self._inject_nan(nxt_inputs, rnd + 1, 0)
+                           if nxt_inputs is not None else None)
                 t_round = time.time()
                 nxt = None
                 if nxt_inputs is not None \
@@ -458,26 +641,43 @@ class Engine:
                     # can run it on the batch axes while the server inner
                     # loop occupies the model axes.  Clients and the
                     # θ_S^t snapshot are stale by exactly one round.
-                    nxt = (self._extract(state, nxt_inputs), rnd)
+                    nxt = (self._extract(state, nxt_inj), rnd)
                 max_lag = max(max_lag, rnd - stage_src)
-                state, metrics = self._tail(state, inputs, stage,
-                                            self.round_key(rnd))
+                if self.recovery is None:
+                    state, metrics = self._tail(state, inj_inputs, stage,
+                                                self.round_key(rnd))
+                else:
+                    state, metrics, attempts, healthy = self._recover_round(
+                        state, inputs, inj_inputs, rnd, stage=stage,
+                        pipelined=True)
+                    if attempts and nxt is not None:
+                        # the async prefetch read a pre-round state that
+                        # recovery discarded — re-extract from the
+                        # accepted state (sync semantics for this round)
+                        nxt = (self._extract(state, nxt_inj), rnd + 1)
                 if nxt_inputs is not None and nxt is None:
                     # sync barrier: extract(k+1) reads the post-Commit
                     # state — bit-for-bit the sequential schedule
-                    nxt = (self._extract(state, nxt_inputs), rnd + 1)
+                    nxt = (self._extract(state, nxt_inj), rnd + 1)
                 if nxt is not None:
-                    (stage, stage_src), inputs = nxt, nxt_inputs
+                    (stage, stage_src), inputs, inj_inputs = \
+                        nxt, nxt_inputs, nxt_inj
             else:
-                cohort, xs, ys, mask = self.sample_round(rng)
+                inputs = self.sample_round(rng)
                 t_round = time.time()
-                if mask is None:
-                    state, metrics = self.algo.round(state, cohort, xs, ys,
-                                                     self.round_key(rnd))
+                if self.recovery is None:
+                    state, metrics = self._round_call(state, inputs,
+                                                      self.round_key(rnd))
                 else:
-                    state, metrics = self.algo.round(state, cohort, xs, ys,
-                                                     self.round_key(rnd),
-                                                     mask)
+                    inj = self._inject_nan(inputs, rnd, 0)
+                    state, metrics, attempts, healthy = \
+                        self._recover_round(state, inputs, inj, rnd)
+            if self.recovery is not None and cfg.resilience.guard:
+                # thread the EMA carry forward and snapshot last-good
+                # states — both stay on device (no extra host sync)
+                self._ema = metrics["health"][HEALTH_EMA]
+                if healthy:
+                    self.recovery.note_accept(rnd, state, self._ema)
             # telemetry rows are appended at sample time (for pipelined
             # runs that's one round AHEAD of the tail); the θ staleness a
             # round actually saw is only known here, once its tail ran
@@ -504,6 +704,15 @@ class Engine:
                 if cfg.ckpt_dir:
                     save_checkpoint(cfg.ckpt_dir, rnd + 1, state,
                                     metadata={"algo": self.algo.name})
+                    if self.faults is not None \
+                            and self.faults.ckpt_corrupt(rnd + 1):
+                        # tear the just-written step: restore must fall
+                        # back past it to the newest valid one
+                        self.faults.corrupt_checkpoint(cfg.ckpt_dir,
+                                                       rnd + 1)
+                        self._ckpt_corruptions += 1
+                        self.log(f"[resilience] injected torn checkpoint "
+                                 f"at step {rnd + 1}")
                 self._emit("on_eval", rnd, loss, mets)
         result = {"algo": self.algo.name, "task": cfg.task,
                   "history": history, "grad_stability": tracker.summary()}
@@ -519,6 +728,10 @@ class Engine:
                 "max_realized_lag": max(r["realized_lag"] for r in tel),
                 "max_drawn_lag": max(r["lag_drawn_max"] for r in tel),
             }
+        if self.recovery is not None:
+            summary = self.recovery.summary()
+            summary["ckpt_corruptions"] = self._ckpt_corruptions
+            result["resilience"] = summary
         if start_round:
             result["resumed_from_round"] = start_round
         if cfg.collect_timing:

@@ -38,6 +38,7 @@ from repro.core.protocol import (EntityState, broadcast_entity, entity_mean,
                                  select_entities, take_entities)
 from repro.core.split import SplitTask
 from repro.optim import Optimizer
+from repro.resilience.guards import health_vector
 from repro.sharding.specs import (constrain_cohort, constrain_cohort_tree,
                                   constrain_entity_params)
 
@@ -118,6 +119,7 @@ class RoundVars:
     ys: Any                           # [C, b, ...] labels
     key: Any
     mask: Any = None                  # [C] attendance mask (None = unpadded)
+    ema: Any = None                   # loss-EMA carry (guard-on rounds only)
     cohort_clients: Optional[EntityState] = None
     server_prev: Any = None           # θ_S^t params, pre-ServerUpdate
     feats: Any = None                 # [C, b, ...] smashed data
@@ -350,6 +352,31 @@ class Commit(Phase):
             raise ValueError(f"unknown Commit mode {self.mode!r}")
 
 
+@dataclass(frozen=True)
+class HealthGuard(Phase):
+    """Trailing phase: fold the health verdict into the round's metrics.
+
+    Appended by the builders only when ``ResilienceConfig.guard`` is on,
+    so the guard-free program compiles to the identical HLO it always
+    did (bit-for-bit when disabled).  Everything it reads — the committed
+    state, the round loss, the cohort intermediates, the loss-EMA carry
+    (``v.ema``, a device scalar the Engine threads round-to-round) — is
+    already live inside the trace, so the check costs no extra dispatch;
+    the Engine pays exactly one host sync reading ``metrics['health']``.
+    See :mod:`repro.resilience.guards` for the vector layout.
+    """
+    alpha: float = 0.1
+    spike_factor: float = 4.0
+
+    def __call__(self, ctx, v):
+        loss = v.metrics.get("server_loss", jnp.zeros(()))
+        health, slot_bad = health_vector(
+            v.state, loss, v.feats, v.fgrads, v.mask, v.ema,
+            self.alpha, self.spike_factor)
+        v.metrics["health"] = health
+        v.metrics["health_slot_bad"] = slot_bad
+
+
 # ----------------------------------------------- fused sequential rounds
 # ssl / sflv2 / fedavg interleave client and server updates inside one
 # scan, so they cannot be expressed as the 5-phase pipeline without
@@ -499,12 +526,19 @@ def build_algorithm(program: RoundProgram, task: SplitTask,
                     donate: bool = False,
                     mesh: Any = None,
                     state_shardings: Any = None,
-                    shard_data: bool = True) -> SLAlgorithm:
+                    shard_data: bool = True,
+                    resilience: Any = None) -> SLAlgorithm:
     """Compile a RoundProgram into the uniform algorithm interface.
 
     ``donate=True`` donates the TrainState buffers to the jitted round
     (in-place on accelerators; skipped by the Engine on CPU where XLA
     cannot honor donation).
+
+    ``resilience`` (a :class:`~repro.resilience.ResilienceConfig` with
+    ``guard=True``) appends the :class:`HealthGuard` phase and the round
+    gains a trailing ``ema`` carry argument; ``None``/guard-off compiles
+    the exact guard-free round (the ``ema=None`` default never enters
+    the trace when the caller omits it).
 
     ``mesh`` + ``state_shardings`` switch on the mesh-native path:
     phases thread ``with_sharding_constraint`` (cohort activations and
@@ -519,17 +553,21 @@ def build_algorithm(program: RoundProgram, task: SplitTask,
     ctx = PhaseContext(task, opt_server, opt_client, cycle,
                        mesh if shard_data else None)
     traces = {"count": 0}
+    guard = (HealthGuard(resilience.ema_alpha, resilience.spike_factor)
+             if resilience is not None and resilience.guard else None)
 
     def init(key, n_clients: int) -> TrainState:
         return init_train_state(key, n_clients, task, opt_server, opt_client,
                                 program.uses_global_client)
 
-    def round_impl(state, cohort, xs, ys, key, mask=None):
+    def round_impl(state, cohort, xs, ys, key, mask=None, ema=None):
         traces["count"] += 1          # executes at trace time only
         v = RoundVars(state=state, cohort=cohort, xs=xs, ys=ys, key=key,
-                      mask=mask)
+                      mask=mask, ema=ema)
         for phase in program.phases:
             phase(ctx, v)
+        if guard is not None:
+            guard(ctx, v)
         return v.state, v.metrics
 
     jit_kwargs = {}
@@ -621,7 +659,8 @@ def build_pipelined_algorithm(program: RoundProgram, task: SplitTask,
                               donate_state: bool = True,
                               mesh: Any = None,
                               state_shardings: Any = None,
-                              shard_data: bool = True
+                              shard_data: bool = True,
+                              resilience: Any = None
                               ) -> Optional[PipelinedAlgorithm]:
     """Compile a RoundProgram into the (extract, tail) dispatch pair.
 
@@ -645,6 +684,8 @@ def build_pipelined_algorithm(program: RoundProgram, task: SplitTask,
                        mesh if shard_data else None)
     pools = any(getattr(p, "mode", None) == "cycle" for p in tail_phases)
     traces = {"extract": 0, "tail": 0}
+    guard = (HealthGuard(resilience.ema_alpha, resilience.spike_factor)
+             if resilience is not None and resilience.guard else None)
 
     def init(key, n_clients: int) -> TrainState:
         return init_train_state(key, n_clients, task, opt_server, opt_client,
@@ -667,7 +708,7 @@ def build_pipelined_algorithm(program: RoundProgram, task: SplitTask,
                    else v.cohort_clients)
         return PipelineStage(clients, server_prev, v.feats, store)
 
-    def tail_impl(state, cohort, xs, ys, key, stage, mask=None):
+    def tail_impl(state, cohort, xs, ys, key, stage, mask=None, ema=None):
         traces["tail"] += 1           # executes at trace time only
         cohort_clients = stage.clients
         if program.uses_global_client:
@@ -679,11 +720,13 @@ def build_pipelined_algorithm(program: RoundProgram, task: SplitTask,
                 cohort_clients = constrain_cohort_tree(cohort_clients,
                                                        ctx.mesh)
         v = RoundVars(state=state, cohort=cohort, xs=xs, ys=ys, key=key,
-                      mask=mask, cohort_clients=cohort_clients,
+                      mask=mask, ema=ema, cohort_clients=cohort_clients,
                       server_prev=stage.server_prev, feats=stage.feats,
                       store=stage.store)
         for phase in tail_phases:
             phase(ctx, v)
+        if guard is not None:
+            guard(ctx, v)
         return v.state, v.metrics
 
     tail_kwargs = {}

@@ -1,1 +1,2 @@
-from repro.checkpoint.io import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.io import (save_checkpoint, load_checkpoint,
+                                 latest_step, checkpoint_valid, valid_steps)

@@ -5,6 +5,20 @@ The manifest stores the flattened key paths and scalar metadata, so a
 checkpoint round-trips to an *identical* tree structure (dict/list/
 NamedTuple nesting is re-assembled from the paths of a template tree,
 or from plain nested dicts when no template is given).
+
+Crash safety contract (format 2):
+
+* Writes are atomic: the payload + manifest land in a hidden temp dir
+  (fsync'd file-by-file, then the directory), which is renamed into
+  place in one step.  A SIGKILL at any instant leaves either the old
+  step set or the new one — never a half-written ``step_<n>``.
+* The manifest carries a CRC-32 of ``arrays.npz``, so a torn payload
+  (truncated file, bit rot) is detectable without parsing it.
+* Readers are fallback-tolerant: :func:`latest_step` and
+  :func:`load_checkpoint` skip unreadable or checksum-failing step dirs
+  with a warning and fall back to the newest VALID step.
+* :func:`_gc` never deletes the newest valid step, whatever ``keep``
+  says — a run can always resume from something.
 """
 from __future__ import annotations
 
@@ -12,13 +26,18 @@ import json
 import os
 import re
 import shutil
+import warnings
+import zlib
 
 import jax
 import numpy as np
 
 from repro.utils.tree import path_str
 
-_STEP_RE = re.compile(r"step_(\d+)$")
+# anchored full-name match: in-progress temp dirs never parse as steps
+_STEP_RE = re.compile(r"^step_(\d+)$")
+_TMP_PREFIX = ".tmp-"
+CHECKPOINT_FORMAT = 2
 
 
 def _flatten(tree):
@@ -26,53 +45,156 @@ def _flatten(tree):
     return {path_str(kp): np.asarray(v) for kp, v in flat}, treedef
 
 
+def _crc32(path: str, chunk: int = 1 << 20) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while block := f.read(chunk):
+            crc = zlib.crc32(block, crc)
+    return crc & 0xFFFFFFFF
+
+
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: dict | None = None,
                     keep: int = 3) -> str:
     out = os.path.join(ckpt_dir, f"step_{step}")
-    tmp = out + ".tmp"
+    tmp = os.path.join(ckpt_dir, f"{_TMP_PREFIX}step_{step}-{os.getpid()}")
     os.makedirs(tmp, exist_ok=True)
     flat, _ = _flatten(tree)
-    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    arrays = os.path.join(tmp, "arrays.npz")
+    with open(arrays, "wb") as f:
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    manifest = {"format": CHECKPOINT_FORMAT, "step": step,
+                "paths": sorted(flat),
+                "checksum": {"arrays.npz": _crc32(arrays)},
+                "metadata": metadata or {}}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump({"step": step, "paths": sorted(flat),
-                   "metadata": metadata or {}}, f, indent=2)
+        json.dump(manifest, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_path(tmp)
     if os.path.exists(out):
         shutil.rmtree(out)
     os.rename(tmp, out)
+    _fsync_path(ckpt_dir)
     _gc(ckpt_dir, keep)
     return out
 
 
-def load_checkpoint(ckpt_dir: str, template, step: int | None = None):
-    """Restore into the structure of ``template`` (arbitrary pytree)."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step}")
-    data = np.load(os.path.join(path, "arrays.npz"))
-    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-    leaves = []
-    for kp, tmpl_leaf in flat:
-        key = path_str(kp)
-        if key not in data:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = data[key]
-        leaves.append(jax.numpy.asarray(arr, dtype=tmpl_leaf.dtype)
-                      if hasattr(tmpl_leaf, "dtype") else arr)
-    return jax.tree_util.tree_unflatten(treedef, leaves), step
+def checkpoint_valid(path: str) -> bool:
+    """Whether ``path`` (a ``step_<n>`` dir) holds a loadable checkpoint.
+
+    Format-2 dirs verify the manifest's CRC-32 against the payload
+    bytes; legacy (pre-checksum) dirs fall back to parsing the payload
+    with ``np.load``.  Any IO/parse failure means invalid — callers skip
+    and fall back, they never raise here.
+    """
+    arrays = os.path.join(path, "arrays.npz")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        expect = manifest.get("checksum", {}).get("arrays.npz")
+        if expect is not None:
+            return _crc32(arrays) == int(expect)
+        with np.load(arrays) as data:          # legacy: no checksum
+            missing = set(manifest.get("paths", [])) - set(data.files)
+        return not missing
+    except Exception:
+        return False
+
+
+def _all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(int(m.group(1)) for d in os.listdir(ckpt_dir)
+                  if (m := _STEP_RE.fullmatch(d)))
+
+
+def valid_steps(ckpt_dir: str, warn: bool = True) -> list[int]:
+    """Ascending step numbers whose dirs pass :func:`checkpoint_valid`;
+    invalid dirs are reported once via ``warnings.warn``."""
+    good = []
+    for s in _all_steps(ckpt_dir):
+        path = os.path.join(ckpt_dir, f"step_{s}")
+        if checkpoint_valid(path):
+            good.append(s)
+        elif warn:
+            warnings.warn(f"skipping corrupt/partial checkpoint {path}",
+                          RuntimeWarning, stacklevel=2)
+    return good
 
 
 def latest_step(ckpt_dir: str) -> int | None:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
-             if (m := _STEP_RE.search(d))]
-    return max(steps) if steps else None
+    steps = valid_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _load_step(ckpt_dir: str, template, step: int):
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for kp, tmpl_leaf in flat:
+            key = path_str(kp)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            leaves.append(jax.numpy.asarray(arr, dtype=tmpl_leaf.dtype)
+                          if hasattr(tmpl_leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def load_checkpoint(ckpt_dir: str, template, step: int | None = None):
+    """Restore into the structure of ``template`` (arbitrary pytree).
+
+    With ``step=None``, walks valid steps newest-first and returns the
+    first that actually loads, warning past any that fail mid-read (the
+    checksum pass and the load race against nothing — a dir can still
+    vanish under gc from a concurrent writer).  An explicit ``step``
+    loads exactly that step or raises.
+    """
+    if step is not None:
+        return _load_step(ckpt_dir, template, step)
+    failures = []
+    for s in reversed(valid_steps(ckpt_dir)):
+        try:
+            return _load_step(ckpt_dir, template, s)
+        except Exception as e:  # pragma: no cover - vanishing-dir race
+            failures.append(f"step_{s}: {e}")
+            warnings.warn(f"failed to load checkpoint step_{s} ({e}); "
+                          "falling back", RuntimeWarning, stacklevel=2)
+    detail = f" (tried: {failures})" if failures else ""
+    raise FileNotFoundError(f"no loadable checkpoints under {ckpt_dir}"
+                            f"{detail}")
 
 
 def _gc(ckpt_dir: str, keep: int):
-    steps = sorted([int(m.group(1)) for d in os.listdir(ckpt_dir)
-                    if (m := _STEP_RE.search(d))])
-    for s in steps[:-keep] if keep > 0 else []:
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+    """Prune old steps and stale temp dirs.
+
+    Only VALID steps count toward ``keep``, and the newest valid step is
+    never deleted — even with ``keep=0`` a crash-interrupted run keeps a
+    resume point.  Invalid (corrupt) step dirs older than the newest
+    valid one are reclaimed.
+    """
+    good = valid_steps(ckpt_dir, warn=False)
+    protect = set(good if keep <= 0 else good[-max(keep, 1):])
+    newest_valid = good[-1] if good else None
+    for s in _all_steps(ckpt_dir):
+        if s in protect:
+            continue
+        if s not in good and (newest_valid is None or s > newest_valid):
+            continue  # corrupt-but-newer: leave for post-mortem
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"),
+                      ignore_errors=True)
+    for d in os.listdir(ckpt_dir):
+        if d.startswith(_TMP_PREFIX) \
+                and not d.endswith(f"-{os.getpid()}"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

@@ -1,0 +1,40 @@
+"""Fault-tolerant training runtime: guards, recovery, fault injection.
+
+Four pieces, split by where they run:
+
+* :mod:`~repro.resilience.guards`  — pure ``jnp`` health checks folded
+  into the compiled round (NaN/Inf + EMA loss-spike).
+* :mod:`~repro.resilience.policy`  — the host-side
+  :class:`RecoveryController` (quarantine ledger, retry budget,
+  last-good snapshot ring, telemetry).
+* :mod:`~repro.resilience.faults`  — deterministic fault-injection
+  streams (pure (seed, salt, round) fold-ins, scenario-profile style).
+* :mod:`~repro.resilience.config`  — the serializable
+  :class:`ResilienceConfig` riding ``ExperimentConfig.resilience``.
+
+The null config is free: no guard phase, no controller, no snapshots —
+bit-for-bit the guard-free Engine with the trace budget untouched.
+"""
+from repro.resilience.config import ACTIONS, ResilienceConfig
+from repro.resilience.faults import (FaultConfig, FaultInjectedError,
+                                     FaultStream, add_fault_arguments,
+                                     build_fault_stream)
+from repro.resilience.guards import (HEALTH_EMA, HEALTH_NONFINITE,
+                                     HEALTH_SLOT_ANY, HEALTH_SPIKE,
+                                     ema_update, health_vector,
+                                     masked_tree_all_finite,
+                                     slot_nonfinite, tree_all_finite)
+from repro.resilience.policy import (FAULT_KINDS, RecoveryController,
+                                     ResilienceExhaustedError,
+                                     quarantine_mask)
+
+__all__ = [
+    "ACTIONS", "ResilienceConfig",
+    "FaultConfig", "FaultInjectedError", "FaultStream",
+    "add_fault_arguments", "build_fault_stream",
+    "HEALTH_EMA", "HEALTH_NONFINITE", "HEALTH_SLOT_ANY", "HEALTH_SPIKE",
+    "ema_update", "health_vector", "masked_tree_all_finite",
+    "slot_nonfinite", "tree_all_finite",
+    "FAULT_KINDS", "RecoveryController", "ResilienceExhaustedError",
+    "quarantine_mask",
+]

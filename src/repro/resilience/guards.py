@@ -1,0 +1,144 @@
+"""In-trace health-guard math: NaN/Inf and loss-spike detection.
+
+Everything here is pure ``jnp`` on values the round already computes —
+the committed TrainState, the round's server loss, the cohort's smashed
+data and feature gradients — so the :class:`~repro.api.phases.HealthGuard`
+phase folds the checks into the SAME jitted round (one trace, no extra
+dispatches).  The Engine reads back one small ``health`` vector per
+round (the single host sync the guard costs) and the per-slot blame
+array only when the verdict is bad.
+
+Layout of the packed ``metrics['health']`` vector (float32 [4]):
+
+    [0] nonfinite — 1.0 when the loss, the committed params/opt state,
+        or any live slot's features/feature-gradients contain NaN/Inf
+    [1] spike     — 1.0 when the loss exceeds ``spike_factor`` x the
+        EMA of accepted losses (armed only once the EMA is warm; the
+        Engine additionally host-gates on ``spike_warmup`` rounds)
+    [2] new_ema   — the EMA updated with this round's loss (fed back as
+        next round's ``ema`` input IF the round is accepted)
+    [3] slot_bad_any — 1.0 when any live slot is to blame (quarantine
+        has a target)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# metrics['health'] slot names, in packing order
+HEALTH_NONFINITE, HEALTH_SPIKE, HEALTH_EMA, HEALTH_SLOT_ANY = range(4)
+
+
+def tree_all_finite(tree) -> jax.Array:
+    """Scalar bool: every inexact leaf of ``tree`` is NaN/Inf-free.
+
+    Integer leaves (step counters, index plans) are skipped — they are
+    finite by construction and ``isfinite`` rejects them anyway.
+    """
+    flags = [jnp.all(jnp.isfinite(leaf))
+             for leaf in jax.tree.leaves(tree)
+             if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact)]
+    if not flags:
+        return jnp.asarray(True)
+    out = flags[0]
+    for f in flags[1:]:
+        out = out & f
+    return out
+
+
+def slot_nonfinite(arrs, n_slots: int, mask=None) -> jax.Array:
+    """[C] float32 blame vector: 1.0 where a LIVE cohort slot delivered
+    NaN/Inf in any of ``arrs`` (each a [C, ...] stack or None).
+
+    Padded/churn-dropped slots (mask 0) are never blamed — their zeroed
+    payloads are clean by construction and quarantining them is a no-op.
+    """
+    bad = jnp.zeros((n_slots,), jnp.float32)
+    for a in arrs:
+        if a is None:
+            continue
+        flat = a.reshape((a.shape[0], -1)).astype(jnp.float32)
+        bad = jnp.maximum(bad,
+                          jnp.any(~jnp.isfinite(flat), axis=-1)
+                          .astype(jnp.float32))
+    if mask is not None:
+        bad = bad * (jnp.asarray(mask, jnp.float32) > 0)
+    return bad
+
+
+def masked_tree_all_finite(tree, mask=None) -> jax.Array:
+    """:func:`tree_all_finite`, but leaves whose leading axis matches the
+    [C] ``mask`` are checked on LIVE slots only.
+
+    Per-slot intermediates (feature gradients, per-slot losses) carry a
+    quarantined slot's NaN harmlessly — every consumer where-masks it
+    out (pooled means, ``select_entities`` commits) — so a health check
+    that read those entries would flag a round the recovery already
+    fixed and spin until the retry budget burns out.
+    """
+    if mask is None:
+        return tree_all_finite(tree)
+    live = jnp.asarray(mask) > 0
+    n = live.shape[0]
+    flags = []
+    for leaf in jax.tree.leaves(tree):
+        leaf = jnp.asarray(leaf)
+        if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+            continue
+        ok = jnp.isfinite(leaf)
+        if leaf.ndim >= 1 and leaf.shape[0] == n:
+            ok = ok | ~live.reshape((n,) + (1,) * (leaf.ndim - 1))
+        flags.append(jnp.all(ok))
+    if not flags:
+        return jnp.asarray(True)
+    out = flags[0]
+    for f in flags[1:]:
+        out = out & f
+    return out
+
+
+def ema_update(ema, loss, alpha: float) -> jax.Array:
+    """One EMA step over ACCEPTED losses.  ``ema == 0`` is the unarmed
+    sentinel (seeded by the first finite loss); a non-finite loss leaves
+    the EMA untouched so a faulted round cannot poison the detector."""
+    ema = jnp.asarray(ema, jnp.float32)
+    loss = jnp.asarray(loss, jnp.float32)
+    finite = jnp.isfinite(loss)
+    seeded = jnp.where(ema != 0.0, (1.0 - alpha) * ema + alpha * loss, loss)
+    return jnp.where(finite, seeded, ema)
+
+
+def health_vector(state, loss, feats, fgrads, mask, ema,
+                  alpha: float, spike_factor: float
+                  ) -> tuple[jax.Array, jax.Array]:
+    """The packed [4] health vector + the [C] slot-blame array.
+
+    ``feats``/``fgrads`` may be None (fused sequential programs carry no
+    per-slot intermediates) — slot blame then stays all-zero and the
+    Engine's quarantine policy escalates to retry.
+
+    Slot BLAME reads the smashed data only: features are produced
+    per-client BEFORE anything is shared, so a NaN there names the
+    offending client unambiguously.  Feature gradients are NOT blamed —
+    one poisoned slot's rows pollute the pooled server update and every
+    slot's gradient goes NaN downstream of it (guilt by contagion, not a
+    culprit).  ``fgrads`` still feeds the round-level nonfinite check —
+    on LIVE slots only, so a freshly-quarantined slot's inert NaN
+    gradient cannot re-flag the round it was just excised from.
+    """
+    loss = jnp.asarray(loss, jnp.float32)
+    n_slots = feats.shape[0] if feats is not None else 1
+    slot_bad = slot_nonfinite([feats], n_slots, mask=mask)
+    fgrads_ok = (masked_tree_all_finite(fgrads, mask) if fgrads is not None
+                 else jnp.asarray(True))
+    finite = (tree_all_finite(state) & jnp.isfinite(loss)
+              & fgrads_ok & (jnp.max(slot_bad) == 0))
+    ema = jnp.asarray(ema if ema is not None else 0.0, jnp.float32)
+    spike = (ema != 0.0) & jnp.isfinite(loss) & (loss > spike_factor * ema)
+    health = jnp.stack([
+        (~finite).astype(jnp.float32),
+        spike.astype(jnp.float32),
+        ema_update(ema, loss, alpha),
+        (jnp.max(slot_bad) > 0).astype(jnp.float32),
+    ])
+    return health, slot_bad

@@ -10,6 +10,11 @@ def pytest_configure(config):
         "kernels: kernel-equivalence, shard-local resample, and Pallas "
         "property suites (the CI 'kernels' leg runs `-m kernels` under 8 "
         "forced host devices)")
+    config.addinivalue_line(
+        "markers",
+        "resilience: fault-injection and crash/resume suites (the CI "
+        "'resilience' leg runs `-m resilience` under 8 forced host "
+        "devices and uploads BENCH_resilience.json)")
 
 
 @pytest.fixture

@@ -354,3 +354,41 @@ def test_client_phase_is_cohort_permutation_equivariant(c, seed):
     for a, b in zip(jax.tree.leaves(c1.params), jax.tree.leaves(c2.params)):
         np.testing.assert_allclose(np.asarray(a)[perm], np.asarray(b),
                                    atol=1e-5)
+
+
+@given(live=st.integers(2, 16), pad=st.integers(0, 8),
+       b=st.integers(1, 6), batch=st.integers(1, 8),
+       nbad=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_quarantined_slot_features_never_reach_server_minibatch(live, pad, b,
+                                                                batch, nbad,
+                                                                seed):
+    """Quarantine soundness over the Engine's exact recovery dataflow:
+    slot blame -> quarantine_mask -> pooled row validity -> masked
+    resample plan.  A blamed slot's mask entry reads 0, so none of its
+    pooled feature rows can appear in any VALID server step of the
+    re-run — its NaN payload is structurally excluded, which is the
+    whole reason the quarantine re-dispatch converges."""
+    from repro.core.feature_store import valid_from_mask
+    from repro.resilience.policy import quarantine_mask
+    rng = np.random.default_rng(seed)
+    mask = np.concatenate([np.ones(live, np.float32),
+                           np.zeros(pad, np.float32)])
+    slot_bad = np.zeros(live + pad, np.float32)
+    bad = rng.choice(live, size=min(nbad, live - 1), replace=False)
+    slot_bad[bad] = 1.0                        # guards only blame LIVE slots
+    qmask = quarantine_mask(mask, slot_bad)
+    assert qmask[bad].max() == 0               # blamed slots excised
+    np.testing.assert_array_equal(              # everyone else untouched
+        np.delete(qmask, bad), np.delete(mask, bad))
+    batch = min(batch, max(1, int(qmask.sum()) * b))
+    valid = valid_from_mask(jnp.asarray(qmask), b)
+    plan, ok = masked_resample_plan(jax.random.PRNGKey(seed), valid, 2, batch)
+    selected = np.asarray(plan)[np.asarray(ok)].ravel()
+    slots = selected // b                      # pooled row -> cohort slot
+    assert slots.size == 0 or qmask[slots].min() > 0
+    assert slots.size == 0 or not np.intersect1d(slots, bad).size
+    # accounting: valid steps cover exactly the surviving rows' worth
+    n_valid = int(qmask.sum()) * b
+    np.testing.assert_array_equal(np.asarray(ok).sum(axis=-1),
+                                  n_valid // batch)

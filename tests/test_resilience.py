@@ -1,0 +1,421 @@
+"""repro.resilience: health guards, recovery policies, crash-safe
+checkpoints, and the deterministic fault-injection harness.
+
+The load-bearing guarantees:
+
+1. **Null resilience == guard-free, bit-for-bit, every algorithm.**
+   The default ``ResilienceConfig`` compiles no guard phase; stronger,
+   ``guard=True`` on a fault-free run reproduces the guard-free history
+   exactly (the health checks read values the round already computes)
+   with the one-trace budget held.
+2. **Every recovery policy completes a poisoned run** with accurate
+   ``result['resilience']`` telemetry: quarantine excises persistent
+   poison via the attendance mask; retry/rollback recover transient
+   faults bit-for-bit (re-running a round from its pre-round state with
+   the same key IS the unfaulted round).
+3. **Checkpoints are crash-safe**: atomic writes, checksum-verified
+   restore that falls back past torn step dirs, gc that never deletes
+   the last valid step — proven end-to-end by a subprocess SIGKILL'd
+   mid-run whose resumed history is bit-for-bit the uninterrupted one.
+"""
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.api import PROGRAMS, Engine, ExperimentConfig
+from repro.checkpoint import (checkpoint_valid, latest_step, load_checkpoint,
+                              save_checkpoint, valid_steps)
+from repro.core.split import make_stage_task
+from repro.data.federated import FederatedDataset
+from repro.models.cnn import mlp
+from repro.resilience import (ACTIONS, FaultConfig, FaultInjectedError,
+                              FaultStream, ResilienceConfig,
+                              build_fault_stream, quarantine_mask)
+
+pytestmark = pytest.mark.resilience
+
+N, ROUNDS = 24, 4
+
+
+def _fed(n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n * 12, 8)).astype(np.float32)
+    w = rng.normal(size=(8, 4))
+    y = np.argmax(x @ w, axis=-1)
+    idx = np.arange(len(x)).reshape(n, -1)
+    return FederatedDataset.from_arrays(x, y, list(idx), seed=seed)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return make_stage_task(mlp(8, [8], 4), cut=1, kind="xent"), _fed()
+
+
+def _cfg(**kw):
+    base = dict(algo="cyclesfl", rounds=ROUNDS, n_clients=N, attendance=0.25,
+                min_cohort=2, batch=4, width=8, cut=1, seed=0,
+                eval_every=ROUNDS)
+    base.update(kw)
+    return ExperimentConfig(**base)
+
+
+def _run(cfg, task, fed):
+    eng = Engine(cfg, task=task, fed=fed, metric_key="accuracy",
+                 log=lambda *a, **k: None)
+    res = eng.run()
+    res["history"] = [{k: v for k, v in row.items() if k != "elapsed_s"}
+                      for row in res["history"]]
+    return eng, res
+
+
+GUARD = ResilienceConfig(guard=True)
+
+
+# ---------------------------------------------- null/guard-clean golden
+@pytest.mark.parametrize("name", sorted(PROGRAMS))
+def test_guard_clean_bit_for_bit(name, setup):
+    """The null config IS the default (same object, same trace); the
+    stronger claim: arming the guard on a fault-free run changes no
+    history bit for any registered algorithm, and both compile once."""
+    task, fed = setup
+    base = _cfg(algo=name)
+    e0, r0 = _run(base, task, fed)
+    e1, r1 = _run(replace(base, resilience=GUARD), task, fed)
+    assert r0["history"] == r1["history"], name
+    assert "resilience" not in r0
+    assert r1["resilience"]["faulted_rounds"] == 0
+    assert e0.algo.trace_count == 1
+    assert e1.algo.trace_count == 1
+
+
+def test_null_config_builds_nothing(setup):
+    task, fed = setup
+    eng = Engine(_cfg(), task=task, fed=fed, log=lambda *a: None)
+    assert eng.faults is None and eng.recovery is None
+    assert not ExperimentConfig().resilience.active
+    assert build_fault_stream(FaultConfig(), 0) is None
+
+
+# --------------------------------------------------- recovery policies
+def test_quarantine_excises_persistent_poison(setup):
+    """A client slot delivering NaN on EVERY attempt can only be saved
+    by quarantine: the blamed slot is masked out mid-round, the client
+    banned from future cohorts, and the run completes finite."""
+    task, fed = setup
+    cfg = _cfg(rounds=6, eval_every=3, resilience=ResilienceConfig(
+        guard=True, on_nonfinite="quarantine",
+        faults=FaultConfig(nan_rate=0.4, persist=10)))
+    eng, res = _run(cfg, task, fed)
+    tel = res["resilience"]
+    assert tel["faulted_rounds"] > 0
+    assert tel["quarantine_events"] > 0
+    assert tel["quarantined_clients"]
+    assert tel["faults"]["nonfinite"] == tel["faulted_rounds"]
+    assert all(np.isfinite(row["test_loss"]) for row in res["history"])
+    # per-round rows name the action taken and the ledger size
+    for row in tel["per_round"]:
+        assert row["attempts"] >= 1
+        assert set(row["actions"]) <= set(ACTIONS)
+        assert row["quarantined_slots"] >= 1
+    # the ban sticks: the controller zeroes quarantined clients out of
+    # every future cohort draw (the sampler consumes these weights)
+    banned = tel["quarantined_clients"]
+    w = eng.recovery.sampling_weights(None)
+    assert w is not None
+    assert all(w[c] == 0.0 for c in banned)
+    assert (w > 0).sum() == N - len(banned)
+
+
+@pytest.mark.parametrize("action", ["retry", "rollback"])
+def test_transient_fault_recovers_bit_for_bit(action, setup):
+    """A transient NaN (clears on the next attempt) recovered by retry
+    OR rollback-to-previous-round re-runs the round from its pre-round
+    state with the same key — so the final history is bit-for-bit the
+    fault-free guarded run's."""
+    task, fed = setup
+    clean = _cfg(resilience=GUARD)
+    _, r_clean = _run(clean, task, fed)
+    cfg = replace(clean, resilience=ResilienceConfig(
+        guard=True, on_nonfinite=action,
+        faults=FaultConfig(nan_rate=0.5, persist=0)))
+    _, r = _run(cfg, task, fed)
+    tel = r["resilience"]
+    assert tel["faulted_rounds"] > 0
+    if action == "retry":
+        assert tel["retries"] > 0
+    else:
+        # round 0 has an empty ring -> escalates to retry; later rounds
+        # roll back to the newest snapshot (== the pre-round state)
+        assert tel["rollbacks"] + tel["retries"] == tel["faulted_rounds"]
+    assert r["history"] == r_clean["history"], action
+
+
+def test_dispatch_error_retries_bit_for_bit(setup):
+    """An injected dispatch exception (guard OFF — the controller alone
+    handles it) retries on a fresh draw and reproduces the unfaulted
+    history exactly."""
+    task, fed = setup
+    _, r0 = _run(_cfg(), task, fed)
+    cfg = _cfg(resilience=ResilienceConfig(
+        faults=FaultConfig(error_rate=0.4)))
+    eng, r = _run(cfg, task, fed)
+    assert r["resilience"]["faults"]["error"] > 0
+    assert r["history"] == r0["history"]
+    assert eng.algo.trace_count == 1
+
+
+def test_unguarded_engine_dies_on_injected_error(setup):
+    """max_retries=0 exhausts immediately — the fault surfaces instead
+    of being silently swallowed."""
+    from repro.resilience import ResilienceExhaustedError
+    task, fed = setup
+    cfg = _cfg(resilience=ResilienceConfig(
+        max_retries=0, faults=FaultConfig(error_rate=0.999)))
+    with pytest.raises(ResilienceExhaustedError):
+        _run(cfg, task, fed)
+
+
+def test_spike_detector_flags_via_policy(setup):
+    """An EMA loss-spike triggers the on_spike action once warm; with
+    'ignore' the run records it and keeps the round."""
+    task, fed = setup
+    cfg = _cfg(rounds=6, eval_every=6, resilience=ResilienceConfig(
+        guard=True, on_spike="ignore", spike_factor=1.0001,
+        spike_warmup=2, ema_alpha=1.0))
+    # spike_factor ~1 + alpha 1.0: any loss increase over the previous
+    # round reads as a spike once the warmup passes
+    _, r = _run(cfg, task, fed)
+    tel = r["resilience"]
+    assert tel["faults"]["spike"] == tel["faulted_rounds"]
+
+
+# ----------------------------------------------------- pipelined rounds
+@pytest.mark.parametrize("staleness", ["sync", "async"])
+def test_pipelined_recovery_completes(staleness, setup):
+    task, fed = setup
+    base = _cfg(pipeline_depth=1, pipeline_staleness=staleness,
+                resilience=GUARD)
+    eng0, r0 = _run(base, task, fed)
+    cfg = replace(base, resilience=ResilienceConfig(
+        guard=True, on_nonfinite="quarantine",
+        faults=FaultConfig(nan_rate=0.4, persist=10)))
+    eng, r = _run(cfg, task, fed)
+    assert r["resilience"]["quarantine_events"] > 0
+    assert all(np.isfinite(row["test_loss"]) for row in r["history"])
+    for e in (eng0, eng):
+        assert e.pipeline.extract_traces == 1
+        assert e.pipeline.tail_traces == 1
+    if staleness == "sync":
+        # guarded fault-free pipelined == guarded sequential
+        _, r_seq = _run(replace(base, pipeline_depth=0), task, fed)
+        assert r0["history"] == r_seq["history"]
+
+
+# --------------------------------------------------- fault determinism
+def test_fault_stream_replays_exactly():
+    cfg = FaultConfig(nan_rate=0.5, nan_slots=2, error_rate=0.3,
+                      ckpt_rate=0.4, persist=1)
+    a, b = FaultStream(cfg, 7), FaultStream(cfg, 7)
+    for rnd in list(range(20)) + list(range(20))[::-1]:
+        for att in (0, 1, 2):
+            np.testing.assert_array_equal(a.nan_slots_for(rnd, att, 6),
+                                          b.nan_slots_for(rnd, att, 6))
+            ra = rb = None
+            try:
+                a.check_dispatch(rnd, att)
+            except FaultInjectedError as e:
+                ra = (e.rnd, e.attempt)
+            try:
+                b.check_dispatch(rnd, att)
+            except FaultInjectedError as e:
+                rb = (e.rnd, e.attempt)
+            assert ra == rb
+        assert a.ckpt_corrupt(rnd) == b.ckpt_corrupt(rnd)
+    # persistence gate: past `persist` attempts the delivery is clean
+    fired = [r for r in range(50) if a.nan_slots_for(r, 0, 6).size]
+    assert fired, "expected some poisoned rounds at rate 0.5"
+    assert all(a.nan_slots_for(r, 2, 6).size == 0 for r in fired)
+
+
+def test_fault_spec_round_trips():
+    cfg = FaultConfig.from_spec("nan=0.2,error=0.1,ckpt=0.5,slots=2,persist=3")
+    assert cfg == FaultConfig(nan_rate=0.2, error_rate=0.1, ckpt_rate=0.5,
+                              nan_slots=2, persist=3)
+    assert FaultConfig.from_dict(cfg.to_dict()) == cfg
+    with pytest.raises(KeyError):
+        FaultConfig.from_spec("bogus=1")
+    with pytest.raises(ValueError):
+        FaultConfig(nan_rate=1.5).validate()
+
+
+# ------------------------------------------------------ config plumbing
+def test_resilience_config_round_trips():
+    rc = ResilienceConfig(guard=True, on_nonfinite="rollback",
+                          max_retries=5, ring_size=3,
+                          faults=FaultConfig(nan_rate=0.1))
+    assert ResilienceConfig.from_dict(rc.to_dict()) == rc
+    cfg = ExperimentConfig(resilience=rc)
+    rt = ExperimentConfig.from_dict(cfg.to_dict())
+    assert rt == cfg
+    # pre-resilience JSONs simply lack the key -> null config
+    d = cfg.to_dict()
+    d.pop("resilience")
+    assert ExperimentConfig.from_dict(d).resilience == ResilienceConfig()
+
+
+def test_resilience_flags_round_trip():
+    ap = argparse.ArgumentParser()
+    ExperimentConfig.add_arguments(ap)
+    args = ap.parse_args(["--guard", "--on-nonfinite", "rollback",
+                          "--max-retries", "5", "--snapshot-ring", "4",
+                          "--faults", "nan=0.2,persist=1"])
+    cfg = ExperimentConfig.from_flags(args)
+    rc = cfg.resilience
+    assert rc.guard and rc.on_nonfinite == "rollback"
+    assert rc.max_retries == 5 and rc.ring_size == 4
+    assert rc.faults.nan_rate == 0.2 and rc.faults.persist == 1
+
+
+def test_validation_rejects_bad_policies():
+    with pytest.raises(ValueError):
+        ResilienceConfig(on_nonfinite="explode").validate()
+    with pytest.raises(ValueError):
+        ResilienceConfig(ring_size=0).validate()
+    with pytest.raises(ValueError):
+        ExperimentConfig(pad_cohorts=False, resilience=ResilienceConfig(
+            guard=True, on_nonfinite="quarantine")).validate()
+    # quarantine-free policies don't need padded cohorts
+    ExperimentConfig(pad_cohorts=False, resilience=ResilienceConfig(
+        guard=True, on_nonfinite="retry", on_error="retry")).validate()
+
+
+# ------------------------------------------------- crash-safe ckpt I/O
+def _tree(v=0.0):
+    return {"w": np.full((4, 3), v, np.float32),
+            "b": {"x": np.arange(6).astype(np.int32)}}
+
+
+def test_checkpoint_checksum_detects_truncation(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1.0))
+    save_checkpoint(d, 2, _tree(2.0))
+    assert latest_step(d) == 2
+    # tear step 2's payload: a partial write frozen mid-flight
+    FaultStream.corrupt_checkpoint(d, 2)
+    assert not checkpoint_valid(os.path.join(d, "step_2"))
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        assert latest_step(d) == 1
+    with pytest.warns(RuntimeWarning):
+        tree, step = load_checkpoint(d, _tree())
+    assert step == 1
+    np.testing.assert_array_equal(tree["w"], _tree(1.0)["w"])
+
+
+def test_gc_never_deletes_last_valid_step(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3):
+        save_checkpoint(d, s, _tree(float(s)), keep=1)
+    assert valid_steps(d) == [3]
+    # corrupt the only survivor, then write a fresh step with keep=1:
+    # gc must keep the newest VALID step and may reclaim the torn one
+    FaultStream.corrupt_checkpoint(d, 3)
+    save_checkpoint(d, 4, _tree(4.0), keep=1)
+    assert valid_steps(d) == [4]
+    FaultStream.corrupt_checkpoint(d, 4)
+    # nothing valid newer: loading falls through with a clear error
+    with pytest.warns(RuntimeWarning):
+        assert latest_step(d) is None
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(FileNotFoundError):
+            load_checkpoint(d, _tree())
+
+
+def test_checkpoint_atomic_write_leaves_no_tmp(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 7, _tree(7.0))
+    entries = os.listdir(d)
+    assert entries == ["step_7"]
+    manifest = json.load(open(os.path.join(d, "step_7", "manifest.json")))
+    assert manifest["format"] == 2
+    assert "arrays.npz" in manifest["checksum"]
+
+
+def test_legacy_checkpoint_without_checksum_still_loads(tmp_path):
+    """Format-1 dirs (no checksum) validate via np.load and keep working."""
+    d = str(tmp_path)
+    save_checkpoint(d, 3, _tree(3.0))
+    mpath = os.path.join(d, "step_3", "manifest.json")
+    m = json.load(open(mpath))
+    del m["checksum"], m["format"]
+    json.dump(m, open(mpath, "w"))
+    assert checkpoint_valid(os.path.join(d, "step_3"))
+    assert latest_step(d) == 3
+
+
+# -------------------------------------------- SIGKILL crash/resume e2e
+def _harness_args(ckpt_dir, rounds=6, **kw):
+    ns = argparse.Namespace(
+        ckpt_dir=ckpt_dir, rounds=rounds, algo="cyclesfl", clients=N,
+        attendance=0.25, batch=4, seed=0, resume=False, guard=False,
+        faults="", sleep_per_round=0.0, out=None)
+    for k, v in kw.items():
+        setattr(ns, k, v)
+    return ns
+
+
+def _strip(rows):
+    return [{k: v for k, v in r.items() if k != "elapsed_s"} for r in rows]
+
+
+def test_sigkill_mid_round_resume_bit_for_bit(tmp_path):
+    """Kill a run with SIGKILL mid-round, resume from its crash-safe
+    checkpoints, and match the uninterrupted run's history exactly."""
+    from repro.resilience import harness
+    ck = str(tmp_path / "ck")
+    golden = harness.build_engine(_harness_args(str(tmp_path / "golden"),
+                                                sleep_per_round=0.0)).run()
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.resilience.harness",
+         "--ckpt-dir", ck, "--rounds", "6", "--clients", str(N),
+         "--batch", "4", "--sleep-per-round", "0.5"],
+        env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    try:
+        deadline = time.time() + 180
+        while time.time() < deadline:
+            if latest_step(ck) is not None and latest_step(ck) >= 2:
+                break
+            if proc.poll() is not None:
+                pytest.fail("harness exited before checkpointing")
+            time.sleep(0.05)
+        else:
+            pytest.fail("harness never wrote step_2")
+        os.kill(proc.pid, signal.SIGKILL)
+    finally:
+        proc.wait()
+    killed_at = latest_step(ck)
+    assert killed_at is not None and killed_at < 6
+    out = str(tmp_path / "resumed.json")
+    subprocess.run(
+        [sys.executable, "-m", "repro.resilience.harness",
+         "--ckpt-dir", ck, "--rounds", "6", "--clients", str(N),
+         "--batch", "4", "--resume", "--out", out],
+        env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        check=True, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+        timeout=300)
+    resumed = json.load(open(out))
+    assert resumed["resumed_from_round"] == killed_at
+    want = {r["round"]: r for r in _strip(golden["history"])}
+    got = _strip(resumed["history"])
+    assert got, "resumed run produced no history"
+    for row in got:
+        assert row == want[row["round"]], row["round"]
