@@ -38,6 +38,14 @@ class ExperimentConfig:
     # per-round PRNG stream: key = PRNGKey(seed * round_key_salt + round)
     round_key_salt: int = 100_000
     collect_timing: bool = False      # block per round and report round_time_s
+    # telemetry sync cadence: with collect_timing the host blocks on the
+    # round's metrics only every sync_every rounds (plus the compile
+    # round and the last round), so steady-state rounds dispatch
+    # back-to-back with ZERO host syncs in between — the device-resident
+    # round path.  1 (default) keeps the classic per-round sync; the
+    # resilience guard forces per-round syncs regardless (its health
+    # verdict is a host read by design).
+    sync_every: int = 1
     # pad every cohort to the static capacity C_max = ceil(attendance * N)
     # and thread an attendance mask through the round, so ONE compiled
     # round function serves every live cohort size (no XLA retraces)
@@ -139,6 +147,9 @@ class ExperimentConfig:
             if any(int(s) < 1 for s in self.mesh_shape):
                 raise ValueError(f"mesh_shape {self.mesh_shape} must be "
                                  "positive")
+        if self.sync_every < 1:
+            raise ValueError(f"sync_every={self.sync_every}: the host "
+                             "must sync at least every round (>= 1)")
         if self.pipeline_depth not in (0, 1):
             raise ValueError(
                 f"pipeline_depth={self.pipeline_depth}: only 0 (sequential) "
@@ -199,6 +210,10 @@ class ExperimentConfig:
         ap.add_argument("--cut", type=int, default=2)
         ap.add_argument("--eval-every", type=int, default=20)
         ap.add_argument("--ckpt-dir", default=None)
+        ap.add_argument("--sync-every", type=int, default=1,
+                        help="host-sync cadence under --collect-timing: "
+                             "block on round metrics every k rounds so "
+                             "steady-state rounds stay device-resident")
         ap.add_argument("--no-pad-cohorts", action="store_true",
                         help="disable fixed-shape padded cohorts (forces an "
                              "XLA retrace per distinct cohort size)")
@@ -237,6 +252,7 @@ class ExperimentConfig:
             lr_client=args.lr_client, alpha=args.alpha, seed=args.seed,
             width=args.width, cut=args.cut, eval_every=args.eval_every,
             ckpt_dir=args.ckpt_dir,
+            sync_every=args.sync_every,
             pad_cohorts=not args.no_pad_cohorts,
             variable_attendance=args.variable_attendance,
             mesh_shape=(tuple(int(s) for s in args.mesh_shape.split(","))

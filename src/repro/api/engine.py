@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import math
 import time
+from contextlib import nullcontext
 from typing import Optional, Sequence
 
 import jax
@@ -68,6 +69,8 @@ from repro.resilience import (HEALTH_EMA, HEALTH_NONFINITE, HEALTH_SPIKE,
                               ResilienceExhaustedError, build_fault_stream)
 from repro.scenario.profiles import build_profile_stream
 from repro.sharding.specs import batch_spec, train_state_shardings
+
+_NULL_SECTION = nullcontext()     # reentrant no-op for unprofiled runs
 
 
 def evaluate(task, state, fed, batch: int = 256, max_batches: int = 8,
@@ -130,8 +133,11 @@ def evaluate(task, state, fed, batch: int = 256, max_batches: int = 8,
         return task.loss(out, y), task.metrics(out, y)
 
     losses, mets = jax.vmap(one)(cps, xs, ys)
-    agg = {k: float(jnp.mean(v)) for k, v in mets.items()}
-    return float(jnp.mean(losses)), agg
+    # one device->host sync for the whole eval (a float() per metric
+    # would round-trip once per key)
+    out = jax.device_get({"loss": jnp.mean(losses),
+                          **{k: jnp.mean(v) for k, v in mets.items()}})
+    return float(out["loss"]), {k: float(out[k]) for k in mets}
 
 
 class Engine:
@@ -143,6 +149,7 @@ class Engine:
                  metric_key: Optional[str] = None,
                  callbacks: Sequence = (),
                  donate: Optional[bool] = None,
+                 profiler=None,
                  log=print):
         cfg.validate()
         if (task is None) != (fed is None):
@@ -158,8 +165,17 @@ class Engine:
         self.metric_key = metric_key or "accuracy"
         self.callbacks = tuple(callbacks)
         self.log = log
+        self.profiler = profiler
         if donate is None:
-            # buffer donation is a no-op XLA warning on CPU; enable elsewhere
+            # donation is supported on CPU too (run() threads the state
+            # linearly, so it is SAFE), but aliasing changes XLA's
+            # fusion choices at the ~1-ulp level, which would break the
+            # bit-for-bit Engine goldens (pipelined == sequential,
+            # mesh(1,1) == unsharded) that anchor this repo's
+            # equivalence contracts.  Default it off on CPU; the
+            # device-resident scaling path (bench workers, the CI
+            # scaling leg) opts in with donate=True, and
+            # tests/test_scaling.py pins the numerics it gets.
             donate = jax.default_backend() != "cpu"
         # ---- fault-tolerant runtime: the deterministic fault stream and
         # (per-run) recovery controller.  The null ResilienceConfig
@@ -290,6 +306,27 @@ class Engine:
             cap = round(cfg.attendance * n)
         return min(max(cfg.min_cohort, cap), n)
 
+    @property
+    def padded_capacity(self) -> int:
+        """The static cohort shape rounds are actually padded to:
+        :attr:`cohort_capacity` rounded UP to a multiple of the mesh's
+        batch-axis shard count, so every shard owns an equal slice of
+        the slot dim (a ragged slot dim would make GSPMD pad the
+        shard_map'd client phases with replicated compute).
+
+        The SAMPLER still clips to the logical ``cohort_capacity``, so
+        cohort draws are device-count-invariant; the alignment slots are
+        always dead (sentinel id, zero mask) and every masked phase
+        treats them exactly like attendance padding — numerics match the
+        unaligned round bit-for-bit.  Identity off-mesh, at 1 device,
+        and with cohort sharding disabled.
+        """
+        cap = self.cohort_capacity
+        if self.mesh is None or not self.cfg.shard_cohort:
+            return cap
+        from repro.sharding.specs import shard_aligned_capacity
+        return shard_aligned_capacity(self.mesh, cap)
+
     def _sample_cohort_ids(self, rng: np.random.Generator):
         """Draw one round's live cohort, advancing the sample clock.
 
@@ -347,7 +384,7 @@ class Engine:
         a no-churn round.
         """
         cfg = self.cfg
-        cap = self.cohort_capacity if cfg.pad_cohorts else None
+        cap = self.padded_capacity if cfg.pad_cohorts else None
         cohort = self._sample_cohort_ids(rng)
         rnd = self._sample_clock - 1       # the round that draw was for
         live = len(cohort)
@@ -475,7 +512,7 @@ class Engine:
         costs per round.  Returns the fault kind or None (healthy)."""
         if not self.cfg.resilience.guard:
             return None
-        h = np.asarray(metrics["health"])
+        h = jax.device_get(metrics["health"])
         if h[HEALTH_NONFINITE] > 0:
             return "nonfinite"
         if h[HEALTH_SPIKE] > 0 and self.recovery.spike_armed():
@@ -607,6 +644,16 @@ class Engine:
         history = []
         round_time, timed_rounds = 0.0, 0
         t0 = time.time()
+        prof = self.profiler
+        sec = (prof.section if prof is not None
+               else (lambda name: _NULL_SECTION))
+        # telemetry sync cadence: the host blocks on round metrics only
+        # at window boundaries (compile round, every sync_k-th round,
+        # the last round) — in between, rounds dispatch back-to-back and
+        # stay device-resident.  The resilience guard host-reads the
+        # health verdict every round by design, so it pins sync_k to 1.
+        sync_k = 1 if cfg.resilience.guard else max(1, cfg.sync_every)
+        t_mark, r_mark = t0, start_round
         # ---- pipeline prime: sample cohort ``start_round`` and put its
         # extraction in flight (async dispatch — does not block the host).
         # On resume the restored state re-primes the pipeline, so the
@@ -616,6 +663,7 @@ class Engine:
         t_tel = len(self._telemetry)     # rows this run will append start here
         stage, stage_src, inputs, inj_inputs, max_lag = \
             None, start_round, None, None, 0
+        nxt_inputs = None                # non-pipelined double buffer
         if pipelined and start_round < cfg.rounds:
             inputs = self.sample_round(rng)
             # attempt-0 fault injection happens BEFORE the priming
@@ -628,8 +676,9 @@ class Engine:
             if pipelined:
                 # prefetch cohort k+1's sampling while round k's compute
                 # is (or is about to be) on the devices
-                nxt_inputs = (self.sample_round(rng)
-                              if rnd + 1 < cfg.rounds else None)
+                with sec("sample"):
+                    nxt_inputs = (self.sample_round(rng)
+                                  if rnd + 1 < cfg.rounds else None)
                 nxt_inj = (self._inject_nan(nxt_inputs, rnd + 1, 0)
                            if nxt_inputs is not None else None)
                 t_round = time.time()
@@ -644,8 +693,9 @@ class Engine:
                     nxt = (self._extract(state, nxt_inj), rnd)
                 max_lag = max(max_lag, rnd - stage_src)
                 if self.recovery is None:
-                    state, metrics = self._tail(state, inj_inputs, stage,
-                                                self.round_key(rnd))
+                    with sec("dispatch"):
+                        state, metrics = self._tail(state, inj_inputs, stage,
+                                                    self.round_key(rnd))
                 else:
                     state, metrics, attempts, healthy = self._recover_round(
                         state, inputs, inj_inputs, rnd, stage=stage,
@@ -663,12 +713,26 @@ class Engine:
                     (stage, stage_src), inputs, inj_inputs = \
                         nxt, nxt_inputs, nxt_inj
             else:
-                inputs = self.sample_round(rng)
+                with sec("sample"):
+                    # double buffer: round k-1 already sampled, padded,
+                    # and device_put this round's inputs while round
+                    # k-1's compute was in flight
+                    inputs = (nxt_inputs if nxt_inputs is not None
+                              else self.sample_round(rng))
+                    nxt_inputs = None
                 t_round = time.time()
                 if self.recovery is None:
-                    state, metrics = self._round_call(state, inputs,
-                                                      self.round_key(rnd))
+                    with sec("dispatch"):
+                        state, metrics = self._round_call(
+                            state, inputs, self.round_key(rnd))
+                    if rnd + 1 < cfg.rounds:
+                        # prefetch cohort k+1 behind the in-flight round
+                        # (device_put is async; nothing here blocks)
+                        with sec("sample"):
+                            nxt_inputs = self.sample_round(rng)
                 else:
+                    # recovery may re-draw quarantine weights mid-round,
+                    # so the faulted path samples strictly per round
                     inj = self._inject_nan(inputs, rnd, 0)
                     state, metrics, attempts, healthy = \
                         self._recover_round(state, inputs, inj, rnd)
@@ -686,14 +750,31 @@ class Engine:
                 self._telemetry[ti]["realized_lag"] = (
                     rnd - stage_src if pipelined else 0)
             if cfg.collect_timing:
-                jax.block_until_ready(metrics["server_loss"])
-                if rnd > start_round:             # skip the compile round
-                    round_time += time.time() - t_round
-                    timed_rounds += 1
+                if sync_k == 1:
+                    with sec("sync"):
+                        jax.block_until_ready(metrics["server_loss"])
+                    if rnd > start_round:         # skip the compile round
+                        round_time += time.time() - t_round
+                        timed_rounds += 1
+                elif rnd == start_round:
+                    # compile round: sync it out of the first window
+                    with sec("sync"):
+                        jax.block_until_ready(metrics["server_loss"])
+                    t_mark, r_mark = time.time(), rnd + 1
+                elif (rnd == cfg.rounds - 1
+                      or (rnd + 1 - start_round) % sync_k == 0):
+                    # window boundary: one sync covers the whole window,
+                    # timing averages over its rounds
+                    with sec("sync"):
+                        jax.block_until_ready(metrics["server_loss"])
+                    round_time += time.time() - t_mark
+                    timed_rounds += rnd + 1 - r_mark
+                    t_mark, r_mark = time.time(), rnd + 1
             tracker.update(metrics)
             self._emit("on_round", rnd, state, metrics)
             if (rnd + 1) % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
-                loss, mets = evaluate(self.task, state, self.fed)
+                with sec("eval"):
+                    loss, mets = evaluate(self.task, state, self.fed)
                 history.append({"round": rnd + 1, "test_loss": loss, **mets,
                                 "train_loss": float(metrics["server_loss"]),
                                 "elapsed_s": round(time.time() - t0, 1)})
@@ -747,4 +828,6 @@ class Engine:
                                 if pipelined else 0),
             }
             result["pipeline"] = self.pipeline_stats
+        if prof is not None:
+            result["profile"] = prof.summary()
         return result

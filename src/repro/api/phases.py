@@ -40,7 +40,7 @@ from repro.core.split import SplitTask
 from repro.optim import Optimizer
 from repro.resilience.guards import health_vector
 from repro.sharding.specs import (constrain_cohort, constrain_cohort_tree,
-                                  constrain_entity_params)
+                                  constrain_entity_params, slot_shard_map)
 
 
 class TrainState(NamedTuple):
@@ -180,19 +180,24 @@ class ExtractFeatures(Phase):
             v.cohort_clients = constrain_cohort_tree(v.cohort_clients,
                                                      ctx.mesh)
         v.server_prev = state.server.params
-        v.feats = jax.vmap(ctx.task.client_forward)(v.cohort_clients.params,
-                                                    v.xs)
+        # slot-parallel extraction runs INSIDE a shard_map: GSPMD
+        # replicates the cohort-vmapped grouped convs (every device
+        # computes all C slots, then slices its own), which is the bulk
+        # of the 1->8 device weak-scaling loss (§Weak scaling)
+        v.feats = slot_shard_map(
+            jax.vmap(ctx.task.client_forward), ctx.mesh,
+            (v.cohort_clients.params, v.xs))
         v.feats = constrain_cohort(v.feats, ctx.mesh)
 
 
 def _pair_server_losses_and_grads(ctx, v):
     """Per-pair server loss/grad at θ_S^t over the cohort's features."""
-    sp = v.state.server.params
 
-    def one(f, y):
+    def one(f, y, sp):
         return jax.value_and_grad(ctx.task.server_loss)(sp, f, y)
 
-    return jax.vmap(one)(v.feats, v.ys)
+    return slot_shard_map(jax.vmap(one, in_axes=(0, 0, None)), ctx.mesh,
+                          (v.feats, v.ys), (v.state.server.params,))
 
 
 @dataclass(frozen=True)
@@ -235,8 +240,9 @@ class ServerUpdate(Phase):
             if ctx.mesh is not None:
                 rep = constrain_cohort_tree(rep, ctx.mesh)
                 gs = constrain_cohort_tree(gs, ctx.mesh)
-            rep = jax.vmap(lambda e, g: entity_step(e, g, ctx.opt_server))(
-                rep, gs)
+            rep = slot_shard_map(
+                jax.vmap(lambda e, g: entity_step(e, g, ctx.opt_server)),
+                ctx.mesh, (rep, gs))
             server = (entity_mean(rep) if v.mask is None
                       else masked_entity_mean(rep, v.mask))
             v.metrics["server_loss"] = masked_mean(losses, v.mask)
@@ -275,7 +281,7 @@ class FeatureGradients(Phase):
                 else replace(ctx.cycle, avg_client_grads=avg))
         v.fgrads = constrain_cohort(
             feature_gradients(ctx.task, params, v.feats, v.ys, ccfg,
-                              mask=v.mask), ctx.mesh)
+                              mask=v.mask, mesh=ctx.mesh), ctx.mesh)
         v.metrics.update(feat_grad_metrics(v.fgrads, mask=v.mask))
 
 
@@ -314,7 +320,7 @@ class ClientUpdate(Phase):
         else:
             v.cohort_clients, gnorms = client_updates(
                 ctx.task, v.cohort_clients, ctx.opt_client, v.xs, v.fgrads,
-                grad_clip=clip, mask=v.mask)
+                grad_clip=clip, mask=v.mask, mesh=ctx.mesh)
             if ctx.mesh is not None:
                 # sharded VJPs: updated cohort entities stay cohort-sharded
                 # into the commit scatter/average
@@ -482,8 +488,8 @@ class LocalFedAvgRound(Phase):
             return (entity_step(se, gs, opt_s),
                     entity_step(ce, gc, opt_c), loss)
 
-        new_servers, new_clients, losses = jax.vmap(one)(servers, clients,
-                                                         v.xs, v.ys)
+        new_servers, new_clients, losses = slot_shard_map(
+            jax.vmap(one), ctx.mesh, (servers, clients, v.xs, v.ys))
         if v.mask is None:
             server, client = entity_mean(new_servers), entity_mean(new_clients)
         else:
@@ -604,7 +610,12 @@ class PipelineStage(NamedTuple):
     """
     clients: Any                      # [C, ...] stack, or shared θ_C entity
     server_prev: Any                  # θ_S^t params snapshot
-    feats: Any                        # [C, b, ...] smashed data
+    feats: Any                        # [C, b, ...] smashed data; None for
+    #                                   cycle programs (the pooled store
+    #                                   carries the same values — the tail
+    #                                   rebuilds this view by reshape, so
+    #                                   the boundary moves the cohort's
+    #                                   features ONCE, not twice)
     store: Any                        # pooled FeatureStore (cycle) or None
 
 
@@ -698,6 +709,13 @@ def build_pipelined_algorithm(program: RoundProgram, task: SplitTask,
         head(ctx, v)
         store = (pool_store(v.feats, ys, mask=mask, mesh=ctx.mesh)
                  if pools else None)
+        # cycle programs: the pooled store IS the smashed data (a
+        # stop_gradient + reshape of it), so handing both across the
+        # dispatch boundary would materialize the cohort's features
+        # twice; the tail rebuilds the [C, b, ...] view by the inverse
+        # reshape (bit-identical values — FeatureGradients reads feats
+        # as a point, never through its graph)
+        feats = None if pools else v.feats
         # θ_S^t keeps its FSDP/TP weight placement while the cohort
         # tensors sit on the batch axes — the disjoint-axis layout that
         # lets XLA overlap this dispatch with the server inner loop
@@ -706,7 +724,7 @@ def build_pipelined_algorithm(program: RoundProgram, task: SplitTask,
         # (see PipelineStage); per-client programs the gathered stack
         clients = (state.client_global if program.uses_global_client
                    else v.cohort_clients)
-        return PipelineStage(clients, server_prev, v.feats, store)
+        return PipelineStage(clients, server_prev, feats, store)
 
     def tail_impl(state, cohort, xs, ys, key, stage, mask=None, ema=None):
         traces["tail"] += 1           # executes at trace time only
@@ -719,9 +737,14 @@ def build_pipelined_algorithm(program: RoundProgram, task: SplitTask,
             if ctx.mesh is not None:
                 cohort_clients = constrain_cohort_tree(cohort_clients,
                                                        ctx.mesh)
+        feats = stage.feats
+        if feats is None:              # rebuild the [C, b, ...] view
+            pooled = stage.store.features
+            cb = jax.tree.leaves(ys)[0].shape[:2]
+            feats = pooled.reshape(cb + pooled.shape[1:])
         v = RoundVars(state=state, cohort=cohort, xs=xs, ys=ys, key=key,
                       mask=mask, ema=ema, cohort_clients=cohort_clients,
-                      server_prev=stage.server_prev, feats=stage.feats,
+                      server_prev=stage.server_prev, feats=feats,
                       store=stage.store)
         for phase in tail_phases:
             phase(ctx, v)

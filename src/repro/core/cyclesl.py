@@ -27,7 +27,8 @@ import jax.numpy as jnp
 
 from repro.core.feature_store import (FeatureStore, gather_batch,
                                       masked_resample_plan, pool_store,
-                                      resample_plan, shard_local_gather)
+                                      resample_plan, shard_local_fused_loss,
+                                      shard_local_gather)
 from repro.core.protocol import (EntityState, entity_step, masked_axis0_mean,
                                  select_entities)
 from repro.core.split import SplitTask
@@ -108,11 +109,23 @@ def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
     """
     sb = min(ccfg.server_batch or batch, store.size)
     shard_local = ccfg.shard_local_resample and mesh is not None
-    # fused path: linear head + single integer label leaf, and not the
-    # shard-local route (fusing INSIDE the shard_map body is a
-    # follow-on; the bare fused pallas_call would reintroduce the
-    # gather-around-the-kernel this config is asking to avoid)
-    fused = (ccfg.fused_gather_loss and not shard_local
+    # minibatch layout: tensor-parallel (replicated rows) when the
+    # server params are FSDP/TP-sharded on this mesh — row-sharding the
+    # batch on the same axis as the weights forces a full weight
+    # all-gather per scan step; data-parallel (rows over 'data') when
+    # the weights are replicated.  Static (shapes + path rules only).
+    if mesh is not None:
+        from repro.sharding.specs import params_are_sharded
+        tp_layout = params_are_sharded(server.params, mesh, "server")
+    else:
+        tp_layout = False
+    # fused path: linear head + single integer label leaf.  On a sharded
+    # mesh this composes with the shard-local resample through
+    # shard_local_fused_loss — the per-row loss runs INSIDE the
+    # shard_map body over each shard's pool slice and only a scalar
+    # psum crosses devices, so the fused kernel no longer reintroduces
+    # the feature-pool all-gather the shard-local route exists to avoid.
+    fused = (ccfg.fused_gather_loss
              and getattr(task, "server_head", None) is not None
              and isinstance(store.labels, jax.Array)
              and jnp.issubdtype(store.labels.dtype, jnp.integer))
@@ -129,8 +142,11 @@ def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
     plan2 = plan.reshape(-1, sb)                     # [E*steps, sb]
 
     def fused_step_loss(params, idx):
-        from repro.kernels import ops
         w = task.server_head(params)
+        if shard_local:
+            return shard_local_fused_loss(store, idx, w, mesh,
+                                          use_kernel=ccfg.resample_use_kernel)
+        from repro.kernels import ops
         return ops.fused_gather_loss_mean(
             store.features.reshape((store.size, -1)), store.labels, idx, w)
 
@@ -141,13 +157,15 @@ def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
         else:
             if shard_local:
                 f, y = shard_local_gather(store, idx, mesh,
-                                          use_kernel=ccfg.resample_use_kernel)
+                                          use_kernel=ccfg.resample_use_kernel,
+                                          replicate_out=tp_layout)
             else:
                 f, y = gather_batch(store, idx,
                                     use_kernel=ccfg.resample_use_kernel)
             if mesh is not None:
                 from repro.sharding.specs import constrain_server_batch
-                f, y = constrain_server_batch(f, y, mesh)
+                f, y = constrain_server_batch(f, y, mesh,
+                                              replicate=tp_layout)
             loss, grads = jax.value_and_grad(task.server_loss)(entity.params,
                                                                f, y)
         grads = _maybe_clip(grads, ccfg.grad_clip)
@@ -176,19 +194,23 @@ def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
 
 
 def feature_gradients(task: SplitTask, server_params, feats, ys,
-                      ccfg: CycleConfig, mask=None):
+                      ccfg: CycleConfig, mask=None, mesh=None):
     """B_i^g for every cohort member, with θ_S^{t+1} frozen (Eq. 5).
 
     ``mask`` ([C], 1.0 = live slot) restricts the SGLR-style cohort-mean
     to live slots so padded members neither contribute to nor dilute the
-    averaged gradient.
+    averaged gradient.  With ``mesh`` set the per-slot grads run inside
+    a shard_map (:func:`repro.sharding.specs.slot_shard_map`) so each
+    device differentiates only its local slots.
     """
     frozen = jax.lax.stop_gradient(server_params)
 
-    def per_client(f, y):
-        return jax.grad(lambda ff: task.server_loss(frozen, ff, y))(f)
+    def per_client(f, y, sp):
+        return jax.grad(lambda ff: task.server_loss(sp, ff, y))(f)
 
-    grads = jax.vmap(per_client)(feats, ys)          # [C, b, ...]
+    from repro.sharding.specs import slot_shard_map
+    grads = slot_shard_map(jax.vmap(per_client, in_axes=(0, 0, None)),
+                           mesh, (feats, ys), (frozen,))  # [C, b, ...]
     if ccfg.avg_client_grads:
         mean = (jnp.mean(grads, axis=0) if mask is None
                 else masked_axis0_mean(grads, mask))
@@ -220,17 +242,19 @@ def client_update_one(task: SplitTask, entity: EntityState, x, g,
 def client_updates(task: SplitTask, clients: EntityState, opt_c: Optimizer,
                    xs, feat_grads,
                    grad_clip: Optional[float] = None,
-                   mask=None) -> tuple[EntityState, jnp.ndarray]:
+                   mask=None, mesh=None) -> tuple[EntityState, jnp.ndarray]:
     """Pull B_i^g through each client's VJP and take one optimizer step.
 
     With ``mask`` set, padded slots receive a zeroed update: their entity
     (params, optimizer state, step counter) passes through unchanged and
     their grad norm reads 0, so the commit phase's scatter/average sees
-    no contribution from them.
+    no contribution from them.  With ``mesh`` set the per-slot VJPs run
+    inside a shard_map (each device updates only its local slots).
     """
-    new_clients, gnorms = jax.vmap(
-        lambda e, x, g: client_update_one(task, e, x, g, opt_c, grad_clip))(
-            clients, xs, feat_grads)
+    from repro.sharding.specs import slot_shard_map
+    new_clients, gnorms = slot_shard_map(jax.vmap(
+        lambda e, x, g: client_update_one(task, e, x, g, opt_c, grad_clip)),
+        mesh, (clients, xs, feat_grads))
     if mask is not None:
         new_clients = select_entities(mask, new_clients, clients)
         gnorms = jnp.where(mask > 0, gnorms, 0.0)
@@ -248,9 +272,10 @@ def cyclesl_extract(task: SplitTask, clients: EntityState, xs, ys,
     two inside one trace is exactly the monolithic :func:`cyclesl_round`.
     Returns ``(feats, store)``.
     """
-    feats = jax.vmap(task.client_forward)(clients.params, xs)
+    from repro.sharding.specs import constrain_cohort, slot_shard_map
+    feats = slot_shard_map(jax.vmap(task.client_forward), mesh,
+                           (clients.params, xs))
     if mesh is not None:
-        from repro.sharding.specs import constrain_cohort
         feats = constrain_cohort(feats, mesh)
     return feats, pool_store(feats, ys, mesh=mesh)
 
@@ -266,13 +291,15 @@ def cyclesl_tail(task: SplitTask, server: EntityState, clients: EntityState,
     server, server_loss = server_inner_loop(
         task, server, opt_s, store, key, ccfg, batch=batch, mesh=mesh)
 
-    fgrads = feature_gradients(task, server.params, feats, ys, ccfg)
+    fgrads = feature_gradients(task, server.params, feats, ys, ccfg,
+                               mesh=mesh)
     fg_flat = fgrads.reshape(fgrads.shape[0], -1).astype(jnp.float32)
     per_sample_norm = jnp.linalg.norm(
         fg_flat, axis=-1) / jnp.sqrt(fg_flat.shape[-1])
 
     clients, client_gnorms = client_updates(task, clients, opt_c, xs, fgrads,
-                                            grad_clip=ccfg.grad_clip)
+                                            grad_clip=ccfg.grad_clip,
+                                            mesh=mesh)
 
     metrics = {
         "server_loss": server_loss,

@@ -18,10 +18,18 @@ class GradStabilityTracker:
     stds: list[float] = field(default_factory=list)
 
     def update(self, metrics: dict):
-        self.means.append(float(metrics["feat_grad_norm_mean"]))
-        self.stds.append(float(metrics["feat_grad_norm_std"]))
+        # keep the device scalars as-is: a float() here would block the
+        # host on every round's metrics, defeating the Engine's
+        # sync_every device-resident cadence.  summary() reads them all
+        # in one transfer at the end of the run.
+        self.means.append(metrics["feat_grad_norm_mean"])
+        self.stds.append(metrics["feat_grad_norm_std"])
 
     def summary(self) -> dict:
+        import jax
+        means, stds = jax.device_get((self.means, self.stds))
+        self.means = [float(v) for v in means]
+        self.stds = [float(v) for v in stds]
         m = np.asarray(self.means)
         return {
             "grad_norm_mean": float(m.mean()) if len(m) else float("nan"),

@@ -160,7 +160,8 @@ def shard_slice_indices(idx, shard: int, rows_per_shard: int
 
 
 def shard_local_gather(store: FeatureStore, idx, mesh,
-                       use_kernel: Optional[bool] = None
+                       use_kernel: Optional[bool] = None,
+                       replicate_out: bool = False
                        ) -> tuple[jax.Array, jax.Array]:
     """Shard-LOCAL resample: ``out[i] = store[idx[i]]`` without gathering
     the pooled operand around the kernel.
@@ -184,6 +185,12 @@ def shard_local_gather(store: FeatureStore, idx, mesh,
     all-gather of the [T, ...] pool — M << T in every CycleSL setting.
     Falls back to :func:`gather_batch` when the pool rows don't divide
     the batch axes (``pool_shard_info`` returns None).
+
+    ``replicate_out=True`` forces the all-reduce (psum) form so the
+    minibatch comes out replicated — the tensor-parallel server layout,
+    where FSDP/TP-sharded weights want full rows on every device.  The
+    psum sums one live contribution and n_shards - 1 exact zeros per
+    row, so the values are still bit-for-bit the GSPMD gather.
     """
     from repro.sharding.specs import pool_shard_info
     info = pool_shard_info(mesh, store.size) if mesh is not None else None
@@ -197,7 +204,7 @@ def shard_local_gather(store: FeatureStore, idx, mesh,
 
     lead = axes if len(axes) > 1 else axes[0]
     M = idx.shape[0]
-    scatter = M % n_shards == 0
+    scatter = M % n_shards == 0 and not replicate_out
 
     def row_spec(a):
         return P(lead, *([None] * (a.ndim - 1)))
@@ -238,6 +245,107 @@ def shard_local_gather(store: FeatureStore, idx, mesh,
                    jax.tree.map(out_spec, store.labels)),
         check_rep=False)
     return fn(store.features, store.labels, idx.astype(jnp.int32))
+
+
+def shard_local_fused_loss(store: FeatureStore, idx, w, mesh,
+                           use_kernel: Optional[bool] = None) -> jax.Array:
+    """Mean fused gather+linear-head-loss over one server minibatch,
+    computed INSIDE a ``shard_map`` over the pool's batch axes —
+    differentiable in the head weights ``w`` only (D_S^f is data,
+    paper Eq. 3).
+
+    This is the shard-local composition of the two paths that could not
+    previously coexist: the fused gather+loss kernel
+    (``kernels.ops.fused_gather_loss_mean``) avoids materializing the
+    gathered minibatch, but GSPMD has no partitioning rule for a bare
+    ``pallas_call``, so on a sharded mesh it all-gathered D_S^f around
+    the kernel — exactly the collective ``shard_local_gather`` exists to
+    kill.  Here each shard runs the fused per-row loss over only the
+    plan rows that land in ITS contiguous pool slice
+    (:func:`shard_slice_indices`), masks the rest to exact zeros, and a
+    scalar ``psum`` of the masked partial sums reassembles the
+    minibatch-mean loss — one f32 scalar on the wire per step instead of
+    the [T, ...] pool.  The backward pass is the analytic linear-head
+    cross-entropy VJP computed the same way: per-shard
+    ``dw = fᵀ dlogits`` partials over owned rows, psum'd.
+
+    The masks partition the gather (each plan row has exactly one owner
+    shard), so the loss equals the unsharded fused path up to summation
+    order.  Falls back to ``fused_gather_loss_mean`` when the pool
+    doesn't divide the batch axes.
+    """
+    from repro.kernels import ops
+    from repro.sharding.specs import pool_shard_info
+    info = pool_shard_info(mesh, store.size) if mesh is not None else None
+    feats2 = store.features.reshape((store.size, -1))
+    if info is None:
+        return ops.fused_gather_loss_mean(feats2, store.labels, idx, w)
+    axes, n_shards, rows_per_shard = info
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    lead = axes if len(axes) > 1 else axes[0]
+    M = idx.shape[0]
+
+    def shard_id():
+        s = jnp.zeros((), jnp.int32)
+        for a in axes:
+            s = s * mesh.shape[a] + jax.lax.axis_index(a)
+        return s
+
+    def fwd_body(f_loc, l_loc, idx, w):
+        local, ok = shard_slice_indices(idx, shard_id(), rows_per_shard)
+        if use_kernel:
+            losses = ops.gather_loss_microbatch(f_loc, l_loc, local, w)
+        else:
+            f = jnp.take(f_loc, local, axis=0).astype(jnp.float32)
+            logits = f @ w.astype(jnp.float32)
+            y = jnp.take(l_loc, local, axis=0).astype(jnp.int32)
+            losses = (jax.nn.logsumexp(logits, axis=-1)
+                      - jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0])
+        losses = jnp.where(ok, losses, 0.0)
+        return jax.lax.psum(jnp.sum(losses), lead) / M
+
+    def bwd_body(f_loc, l_loc, idx, w, g):
+        local, ok = shard_slice_indices(idx, shard_id(), rows_per_shard)
+        f = jnp.take(f_loc, local, axis=0).astype(jnp.float32)
+        logits = f @ w.astype(jnp.float32)
+        y = jnp.take(l_loc, local, axis=0)
+        p = jax.nn.softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(y, w.shape[1], dtype=jnp.float32)
+        # rows owned by other shards contribute exact zeros to dw
+        dlog = jnp.where(ok[:, None], (p - onehot) * (g / M), 0.0)
+        return jax.lax.psum(f.T @ dlog, lead).astype(w.dtype)
+
+    row = lambda a: P(lead, *([None] * (a.ndim - 1)))
+    fwd_sm = shard_map(fwd_body, mesh=mesh,
+                       in_specs=(row(feats2), P(lead), P(None), P(None, None)),
+                       out_specs=P(), check_rep=False)
+    bwd_sm = shard_map(bwd_body, mesh=mesh,
+                       in_specs=(row(feats2), P(lead), P(None), P(None, None),
+                                 P()),
+                       out_specs=P(None, None), check_rep=False)
+
+    @jax.custom_vjp
+    def fused(feats2, labels, idx, w):
+        return fwd_sm(feats2, labels, idx, w)
+
+    def fused_fwd(feats2, labels, idx, w):
+        return fused(feats2, labels, idx, w), (feats2, labels, idx, w)
+
+    def fused_bwd(res, g):
+        import numpy as np
+        feats2, labels, idx, w = res
+        dw = bwd_sm(feats2, labels, idx, w, g)
+        zero = lambda x: (np.zeros(x.shape, jax.dtypes.float0)
+                          if jnp.issubdtype(x.dtype, jnp.integer)
+                          else jnp.zeros_like(x))
+        return zero(feats2), zero(labels), zero(idx), dw
+
+    fused.defvjp(fused_fwd, fused_bwd)
+    return fused(feats2, store.labels, idx.astype(jnp.int32), w)
 
 
 def pool_store(feats, ys, mask=None, mesh=None) -> FeatureStore:

@@ -48,6 +48,14 @@ RULES: list[tuple[str, tuple]] = [
     (r"moe/w_gate$", ("model", "data", None)),
     (r"moe/w_up$", ("model", "data", None)),
     (r"moe/w_down$", ("model", None, "data")),
+    # CNN/MLP dense layers (the CycleSL server stage at the deep cuts):
+    # FSDP over the input dim + TP over the output dim.  Without this
+    # the server inner loop all-reduces the FULL dense gradient and
+    # runs full-size adam on every device each scan step — the dominant
+    # ServerUpdate cost in the 1->8 device weak-scaling loss (§Weak
+    # scaling, ARCHITECTURE.md).  shard_if_divisible drops either axis
+    # when the dim doesn't divide.
+    (r"lin/w$", ("data", "model")),
     # mamba2
     (r"mamba/w_in$", ("data", "model")),
     (r"mamba/conv_w$", (None, "model")),
@@ -274,19 +282,48 @@ def constrain_entity_params(params, mesh: Optional[Mesh], role: str = "server"):
     return jax.tree.map(lambda l, s: _wsc(l, mesh, s), params, specs)
 
 
-def constrain_server_batch(f, y, mesh: Optional[Mesh]):
-    """Keep the CycleSL server inner loop data-parallel on the mesh.
+def params_are_sharded(params, mesh: Optional[Mesh],
+                       role: str = "server") -> bool:
+    """True when any leaf of ``params`` gets a non-replicated spec under
+    the path rules — i.e. the entity runs FSDP/TP on this mesh.  Purely
+    static (shapes + rules); safe to call at trace time."""
+    if mesh is None or params is None:
+        return False
+    for spec in jax.tree.leaves(param_specs(params, mesh, role),
+                                is_leaf=lambda x: isinstance(x, P)):
+        if any(ax is not None for ax in spec):
+            return True
+    return False
 
-    GSPMD propagates FSDP *weight* shardings into the resampled feature
-    batches (the 'data' axis lands on d_model and the batch dim silently
-    replicates — §Perf iteration 3); this pins the resampled (features,
-    labels) minibatch instead: rows over 'data', and for >=3-d
-    transformer features the model dim over 'model' (falling back to
-    sequence sharding when the server batch doesn't divide 'data').
-    Replaces the old un-serializable ``CycleConfig.batch_constraint``
-    callable hook.
+
+def constrain_server_batch(f, y, mesh: Optional[Mesh],
+                           replicate: bool = False):
+    """Pin the CycleSL server inner loop's minibatch layout on the mesh.
+
+    Default (``replicate=False``): data-parallel — GSPMD propagates FSDP
+    *weight* shardings into the resampled feature batches (the 'data'
+    axis lands on d_model and the batch dim silently replicates — §Perf
+    iteration 3); this pins the resampled (features, labels) minibatch
+    instead: rows over 'data', and for >=3-d transformer features the
+    model dim over 'model' (falling back to sequence sharding when the
+    server batch doesn't divide 'data').  Replaces the old
+    un-serializable ``CycleConfig.batch_constraint`` callable hook.
+
+    ``replicate=True``: tensor-parallel — used when the server params
+    themselves are FSDP/TP-sharded (:func:`params_are_sharded`).  Row-
+    sharding the minibatch on the same axis as the weights would force
+    GSPMD to all-gather the full weight matrix every scan step; with the
+    minibatch replicated the contraction partials travel instead (an
+    activation-sized all-reduce, orders of magnitude smaller than the
+    weights) and the optimizer update stays 1/n_shards per device
+    (§Weak scaling, ARCHITECTURE.md).
     """
     if mesh is None:
+        return f, y
+    if replicate:
+        f = _wsc(f, mesh, P(*([None] * f.ndim)))
+        y = jax.tree.map(
+            lambda l: _wsc(l, mesh, P(*([None] * l.ndim))), y)
         return f, y
     d_ax = shard_if_divisible(f.shape[0], "data", mesh)
     m_ax = "model" if "model" in mesh.shape else None
@@ -300,6 +337,101 @@ def constrain_server_batch(f, y, mesh: Optional[Mesh]):
     y = jax.tree.map(
         lambda l: _wsc(l, mesh, P(d_ax, *([None] * (l.ndim - 1)))), y)
     return f, y
+
+
+def cohort_shard_axes(mesh: Optional[Mesh], n_slots: int
+                      ) -> Optional[tuple]:
+    """Batch-axis tuple the [C, ...] cohort dim shards over, or None when
+    there is no mesh / the dim doesn't divide the combined axis size.
+    Mirrors :func:`batch_spec`'s axis choice ('pod','data' then 'data'
+    alone)."""
+    if mesh is None:
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if axes and n_slots % size == 0:
+        return axes
+    if "data" in mesh.shape and n_slots % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def shard_aligned_capacity(mesh: Optional[Mesh], capacity: int) -> int:
+    """Round a cohort capacity up to a multiple of the batch-axis shard
+    count so no shard runs under-filled (and :func:`batch_spec` never
+    falls back to replicated).  Padded rounds are capacity-invariant
+    (the PR 2 masking property), which is what makes this round-up
+    numerically free.  Identity off-mesh and at 1 device."""
+    if mesh is None:
+        return capacity
+    size = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            size *= mesh.shape[a]
+    if size <= 1:
+        return capacity
+    return ((capacity + size - 1) // size) * size
+
+
+def slot_shard_map(fn, mesh: Optional[Mesh], slot_args: tuple,
+                   rep_args: tuple = ()):
+    """Run a purely slot-wise cohort computation inside a ``shard_map``
+    over the batch axes, so each device computes only its ``C /
+    n_shards`` local slots.
+
+    ``fn(*slot_args, *rep_args)`` must be embarrassingly parallel over
+    the leading dim of every ``slot_args`` leaf (slot ``i`` of every
+    output depends only on slot ``i`` of the inputs — the vmapped
+    client-forward / per-client VJP / per-replica step shape).
+    ``rep_args`` leaves are replicated to every shard.
+
+    Why not leave it to GSPMD: the cohort-vmapped convolutions lower to
+    ``feature_group_count=C`` grouped convs whose slot dim is folded
+    into the channel dims; GSPMD has no partitioning rule for that
+    fold, so it *replicates* the grouped conv on every device and then
+    dynamic-slices out the local slot — 8 devices each do all 8 slots'
+    work (§Weak scaling, ARCHITECTURE.md).  The manual shard_map makes
+    the slot partition structural instead of inferred.
+
+    Falls back to the plain call when there is no mesh, when C doesn't
+    divide the batch-axis shard count (the Engine's shard-aligned
+    capacity makes the divisible case the steady state), or when an
+    activation mesh is registered (``set_activation_mesh``): the
+    launcher's transformer/whisper stages constrain their own
+    activations via ``constrain_batch``, and a named-axis constraint is
+    illegal inside the manual region — those stacks keep the GSPMD
+    path.  Per-slot math is unchanged, so the result is bit-for-bit the
+    GSPMD path's.
+    """
+    if mesh is None or _ACTIVATION_MESH is not None:
+        return fn(*slot_args, *rep_args)
+    leaves = [l for l in jax.tree.leaves(slot_args)
+              if hasattr(l, "ndim") and l.ndim >= 1]
+    if not leaves:
+        return fn(*slot_args, *rep_args)
+    C = leaves[0].shape[0]
+    axes = cohort_shard_axes(mesh, C)
+    if axes is None:
+        return fn(*slot_args, *rep_args)
+    from jax.experimental.shard_map import shard_map
+    lead = axes if len(axes) > 1 else axes[0]
+
+    def sspec(l):
+        return P(lead, *([None] * (l.ndim - 1)))
+
+    def rspec(l):
+        return P(*([None] * getattr(l, "ndim", 0)))
+
+    out_shape = jax.eval_shape(lambda s, r: fn(*s, *r), slot_args, rep_args)
+    wrapped = shard_map(
+        lambda s, r: fn(*s, *r), mesh=mesh,
+        in_specs=(jax.tree.map(sspec, slot_args),
+                  jax.tree.map(rspec, rep_args)),
+        out_specs=jax.tree.map(sspec, out_shape),
+        check_rep=False)
+    return wrapped(slot_args, rep_args)
 
 
 def train_state_shardings(state, mesh: Mesh, moe_shard_mode: str = "expert",

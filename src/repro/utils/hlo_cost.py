@@ -211,6 +211,10 @@ class ModuleCost:
     traffic_bytes: float = 0.0
     collective_bytes: float = 0.0
     collective_by_kind: dict = field(default_factory=lambda: defaultdict(float))
+    # per-kind census: {'sites': distinct HLO op sites, 'execs': loop-
+    # multiplied executions per round, 'bytes': loop-multiplied operand
+    # bytes, 'max_op_bytes': largest single-op operand bytes}
+    collective_census: dict = field(default_factory=dict)
     multipliers: dict = field(default_factory=dict)
 
     def summary(self) -> dict:
@@ -219,6 +223,9 @@ class ModuleCost:
             "traffic_bytes": self.traffic_bytes,
             "collective_bytes": self.collective_bytes,
             "collective_by_kind": dict(self.collective_by_kind),
+            "collective_census": {
+                k: {**v, "op_bytes": sorted(v["op_bytes"])}
+                for k, v in self.collective_census.items()},
         }
 
 
@@ -409,6 +416,14 @@ def module_cost(text: str) -> ModuleCost:
                     nbytes = sym_bytes.get(name, 0)
                 cost.collective_bytes += mult * nbytes
                 cost.collective_by_kind[copm.group(1)] += mult * nbytes
+                cen = cost.collective_census.setdefault(
+                    copm.group(1), {"sites": 0, "execs": 0.0, "bytes": 0.0,
+                                    "max_op_bytes": 0.0, "op_bytes": set()})
+                cen["sites"] += 1
+                cen["execs"] += mult
+                cen["bytes"] += mult * nbytes
+                cen["max_op_bytes"] = max(cen["max_op_bytes"], float(nbytes))
+                cen["op_bytes"].add(int(nbytes))
 
             # ---- HBM traffic at fusion boundaries (non-fused comps) ----
             if not is_fused:
@@ -445,3 +460,58 @@ def module_cost(text: str) -> ModuleCost:
                     else:
                         cost.traffic_bytes += mult * (outb + sum(operands))
     return cost
+
+
+def collective_census(text: str) -> dict:
+    """Per-kind collective census of one optimized HLO module: how many
+    all-gather/all-reduce/reduce-scatter/… op SITES the compiled round
+    contains, how many times they EXECUTE per round (while-loop trip
+    counts multiplied through the call graph), the loop-multiplied
+    operand bytes they move, and the largest single-op operand bytes.
+
+    The census is the evidence format behind the phase-boundary
+    collective surgery: ``op_bytes`` (distinct single-op operand sizes)
+    is what lets :func:`assert_no_pool_allgather` distinguish a gather
+    OF the feature pool from legitimate FSDP weight rehydration.
+    """
+    return {k: {**v, "op_bytes": sorted(v["op_bytes"])}
+            for k, v in module_cost(text).collective_census.items()}
+
+
+def assert_no_pool_allgather(text: str, pool_bytes: int, n_shards: int = 1,
+                             kinds: tuple = ("all-gather",),
+                             extra_sizes: tuple = ()) -> dict:
+    """Assert the compiled round never all-gathers the pooled feature
+    store D_S^f.
+
+    A collective of the pool has one of a small set of exact operand
+    sizes: the full pool (``pool_bytes`` — a replicated re-broadcast) or
+    one batch-axis shard of it (``pool_bytes / n_shards`` — the operand
+    of a GSPMD all-gather re-materializing the pool from its shards,
+    the collective the shard-local resample exists to remove).  Checking
+    for those exact sizes — rather than a "nothing bigger than the pool
+    shard" threshold — keeps the assertion orthogonal to collectives the
+    round is SUPPOSED to run: FSDP parameter rehydration gathers are
+    weight-shaped, not pool-shaped, and at client-heavy cuts they are
+    legitimately larger than a pool shard.  Pass per-step minibatch
+    sizes via ``extra_sizes`` to also outlaw per-scan-step row gathers.
+
+    Returns the census on success; raises ``AssertionError`` naming the
+    offending kind and size otherwise.
+    """
+    forbidden = {int(pool_bytes), int(pool_bytes) // max(1, n_shards),
+                 *(int(s) for s in extra_sizes)}
+    census = collective_census(text)
+    for kind in kinds:
+        rec = census.get(kind)
+        if not rec:
+            continue
+        hit = forbidden & set(rec["op_bytes"])
+        if hit:
+            raise AssertionError(
+                f"compiled round contains a {kind} moving a pool-sized "
+                f"operand ({sorted(hit)} bytes; pool={pool_bytes} over "
+                f"{n_shards} shards): the feature store is being "
+                f"re-materialized around the shard-local path "
+                f"({rec['sites']} sites, {rec['execs']:.0f} execs/round)")
+    return census
