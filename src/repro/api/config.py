@@ -15,6 +15,7 @@ from typing import Optional
 
 from repro.core.cyclesl import CycleConfig
 from repro.resilience.config import ResilienceConfig
+from repro.serve.config import ServeConfig
 from repro.scenario.profiles import ScenarioConfig
 
 
@@ -96,6 +97,12 @@ class ExperimentConfig:
     # loss-spike checks into the compiled round and arms the per-fault
     # recovery policies (quarantine / retry / rollback).
     resilience: ResilienceConfig = field(default_factory=ResilienceConfig)
+    # --- continuous-batching serve runtime (repro.serve) ---
+    # knobs for the serving-side consumer of this config: slot-table
+    # capacity, prompt/generation budgets, deadlines and retry/backoff.
+    # Training ignores it; `repro.launch.serve --continuous` and
+    # `benchmarks/bench_serving.py` build their runtime from it.
+    serve: ServeConfig = field(default_factory=ServeConfig)
     cycle: CycleConfig = field(default_factory=CycleConfig)
 
     # ---------------------------------------------------------- builders
@@ -120,6 +127,10 @@ class ExperimentConfig:
         resilience = d.pop("resilience", {})
         if not isinstance(resilience, ResilienceConfig):
             resilience = ResilienceConfig.from_dict(resilience)
+        # pre-serve configs simply lack the key -> default serve knobs
+        serve = d.pop("serve", {})
+        if not isinstance(serve, ServeConfig):
+            serve = ServeConfig.from_dict(serve)
         # JSON round-trip turns tuples into lists; normalize back
         if d.get("mesh_shape") is not None:
             d["mesh_shape"] = tuple(int(s) for s in d["mesh_shape"])
@@ -129,7 +140,8 @@ class ExperimentConfig:
         unknown = set(d) - known
         if unknown:
             raise KeyError(f"unknown ExperimentConfig fields: {sorted(unknown)}")
-        return cls(cycle=cycle, scenario=scenario, resilience=resilience, **d)
+        return cls(cycle=cycle, scenario=scenario, resilience=resilience,
+                   serve=serve, **d)
 
     def validate(self) -> "ExperimentConfig":
         from repro.api.registry import PROGRAMS
@@ -174,6 +186,7 @@ class ExperimentConfig:
             raise ValueError(
                 "resilience quarantine policy requires pad_cohorts=True "
                 "(slot quarantine rides the compile-once attendance mask)")
+        self.serve.validate()
         return self
 
     # ------------------------------------------------------------- flags
@@ -241,6 +254,7 @@ class ExperimentConfig:
                              "extraction overlapped with the server phase")
         ScenarioConfig.add_arguments(ap)
         ResilienceConfig.add_arguments(ap)
+        ServeConfig.add_arguments(ap)
         return ap
 
     @classmethod
@@ -264,6 +278,7 @@ class ExperimentConfig:
             pipeline_staleness=args.pipeline_staleness,
             scenario=ScenarioConfig.from_flags(args),
             resilience=ResilienceConfig.from_flags(args),
+            serve=ServeConfig.from_flags(args),
             cycle=CycleConfig(server_epochs=args.server_epochs,
                               server_batch=args.server_batch,
                               grad_clip=args.grad_clip,

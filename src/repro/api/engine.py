@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import math
 import time
+import warnings
 from contextlib import nullcontext
 from typing import Optional, Sequence
 
@@ -58,7 +59,8 @@ from repro.api.phases import (PipelinedAlgorithm, SLAlgorithm, TrainState,
                               init_train_state)
 from repro.api.registry import get_program
 from repro.api.tasks import build_task
-from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.checkpoint import (latest_step, load_checkpoint, load_metadata,
+                              save_checkpoint)
 from repro.core.drift import GradStabilityTracker
 from repro.core.split import SplitTask
 from repro.data.federated import FederatedDataset, sample_cohort
@@ -89,7 +91,18 @@ def evaluate(task, state, fed, batch: int = 256, max_batches: int = 8,
         # sync device->host once at the end (instead of a float() sync
         # per test batch, which serializes host and device)
         cp, sp = state.client_global.params, state.server.params
-        xs, ys = fed.test_arrays()
+        # probe test_arrays() directly rather than scanning fed.clients
+        # (which would materialize lazy population clients); with no
+        # test data anywhere it raises on the empty concatenate
+        try:
+            xs, ys = fed.test_arrays()
+        except ValueError:
+            xs = ys = ()
+        if not len(xs):
+            warnings.warn("evaluate: pooled test set is empty; skipping "
+                          "evaluation (NaN loss)", RuntimeWarning,
+                          stacklevel=2)
+            return float("nan"), {}
         n = min(len(xs), batch * max_batches)
         nfull, rem = divmod(n, batch)
 
@@ -122,6 +135,13 @@ def evaluate(task, state, fed, batch: int = 256, max_batches: int = 8,
     # per-client evaluation (vmapped: one trace, truncated to the common
     # test size so client stacks are rectangular)
     idxs = [i for i, c in enumerate(fed.clients) if len(c.x_test)][:max_clients]
+    if not idxs:
+        # no client holds test data (e.g. a train-only federation):
+        # evaluation is undefined, not an error — report NaN and move on
+        warnings.warn("evaluate: no sampled client has test data; "
+                      "skipping per-client evaluation (NaN loss)",
+                      RuntimeWarning, stacklevel=2)
+        return float("nan"), {}
     t = min(len(fed.clients[i].x_test) for i in idxs)
     xs = jnp.asarray(np.stack([fed.clients[i].x_test[:t] for i in idxs]))
     ys = jnp.asarray(np.stack([fed.clients[i].y_test[:t] for i in idxs]))
@@ -212,6 +232,12 @@ class Engine:
         # then skipped and the run is bit-for-bit scenario-free.
         self.scenario = build_profile_stream(cfg.scenario, fed.n_clients,
                                              cfg.seed)
+        # resume-replay ledger window: draws for rounds below the cutoff
+        # reconstruct the quarantine set the ORIGINAL run's sampler saw
+        # at that round (from the persisted event history) instead of
+        # the final restored set — see restore()
+        self._ledger_cutoff = 0
+        self._ledger_offset = 0
         self._sample_clock = 0            # rounds drawn so far (scenario
                                           # streams fold this in, resume
                                           # fast-forwards it)
@@ -346,7 +372,19 @@ class Engine:
             # quarantined clients draw weight 0 from here on; with no
             # quarantines this is a strict pass-through (None stays None,
             # so the null path keeps the exact scenario-free rng draws)
-            weights = self.recovery.sampling_weights(weights)
+            ctl = self.recovery
+            if rnd < self._ledger_cutoff:
+                # resume replay: this draw happened BEFORE some of the
+                # restored ledger's events — weight it with the set as
+                # of its original draw time (pipelined runs draw one
+                # round ahead of recovery, hence the offset)
+                saved = ctl.quarantined
+                ctl.quarantined = ctl.quarantined_as_of(
+                    rnd - self._ledger_offset)
+                weights = ctl.sampling_weights(weights)
+                ctl.quarantined = saved
+            else:
+                weights = ctl.sampling_weights(weights)
         return sample_cohort(self.fed.n_clients, cfg.attendance, rng,
                              min_cohort=cfg.min_cohort,
                              variable=cfg.variable_attendance,
@@ -452,6 +490,25 @@ class Engine:
         state, _ = load_checkpoint(cfg.ckpt_dir, template, step=step)
         if self.state_shardings is not None:
             state = jax.device_put(state, self.state_shardings)
+        if self.recovery is not None:
+            # restore the recovery carry BEFORE replaying the sampling
+            # stream: replay reconstructs the per-round quarantine set
+            # from the persisted event history, so the replayed draws
+            # consume exactly the variates the original run's did
+            # (rng.choice with weights takes a different draw path than
+            # without).  Older checkpoints without the key keep the
+            # fresh controller (their runs had nothing to remember).
+            meta = load_metadata(cfg.ckpt_dir, step).get("resilience")
+            if meta:
+                self.recovery.restore_state(meta)
+                if "ema" in meta:
+                    self._ema = jnp.asarray(meta["ema"], jnp.float32)
+            # pipelined runs draw round r's cohort one loop iteration
+            # early (before round r-1's recovery), so their draws trail
+            # the ledger by one extra round — including the post-replay
+            # priming draw for round `step` itself
+            self._ledger_offset = 1 if self.pipeline is not None else 0
+            self._ledger_cutoff = step + self._ledger_offset
         self._replay_sampling(rng, step)
         self.log(f"[{self.algo.name}] resumed from {cfg.ckpt_dir} at "
                  f"round {step}")
@@ -579,7 +636,8 @@ class Engine:
                     sb = (metrics.get("health_slot_bad")
                           if metrics is not None else None)
                     nm = (ctl.quarantine(np.asarray(cur_inputs[0]),
-                                         np.asarray(mask), np.asarray(sb))
+                                         np.asarray(mask), np.asarray(sb),
+                                         rnd=rnd)
                           if mask is not None and sb is not None else None)
                     if nm is not None:
                         placed = self._place(nm)
@@ -783,8 +841,18 @@ class Engine:
                          f"{self.metric_key}="
                          f"{mets.get(self.metric_key, float('nan')):.4f}")
                 if cfg.ckpt_dir:
+                    meta = {"algo": self.algo.name}
+                    if self.recovery is not None:
+                        # persist the recovery carry a resumed run must
+                        # not forget: the quarantine ledger (+ replayable
+                        # event history) and the spike-EMA scalar
+                        # (fp32 -> python float -> fp32 is exact)
+                        meta["resilience"] = {
+                            **self.recovery.export_state(),
+                            "ema": float(jax.device_get(self._ema)),
+                        }
                     save_checkpoint(cfg.ckpt_dir, rnd + 1, state,
-                                    metadata={"algo": self.algo.name})
+                                    metadata=meta)
                     if self.faults is not None \
                             and self.faults.ckpt_corrupt(rnd + 1):
                         # tear the just-written step: restore must fall

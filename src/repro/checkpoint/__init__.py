@@ -1,2 +1,3 @@
 from repro.checkpoint.io import (save_checkpoint, load_checkpoint,
-                                 latest_step, checkpoint_valid, valid_steps)
+                                 load_metadata, latest_step,
+                                 checkpoint_valid, valid_steps)

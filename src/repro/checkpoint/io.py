@@ -176,6 +176,15 @@ def load_checkpoint(ckpt_dir: str, template, step: int | None = None):
                             f"{detail}")
 
 
+def load_metadata(ckpt_dir: str, step: int) -> dict:
+    """The manifest's ``metadata`` dict for one step (``{}`` when the
+    manifest predates metadata or carries none).  Cheap — reads only the
+    JSON manifest, never the array payload."""
+    path = os.path.join(ckpt_dir, f"step_{step}", "manifest.json")
+    with open(path) as f:
+        return json.load(f).get("metadata") or {}
+
+
 def _gc(ckpt_dir: str, keep: int):
     """Prune old steps and stale temp dirs.
 

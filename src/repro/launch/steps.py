@@ -293,6 +293,20 @@ def _decode_state_spec(path: str, leaf, mesh) -> P:
     return P()
 
 
+def decode_state_shardings(a_state, mesh):
+    """NamedSharding tree for a decode state (or serving slot table).
+
+    Public wrapper over the `_DECODE_RULES` placement: any pytree whose
+    leaf paths follow the decode-state naming (`kv/k`, `mamba/h`, ...)
+    with the batch/slot axis in the batch position gets the exact
+    shardings `build_decode_step` lowers — the serve runtime places its
+    slot table with this so serving rides the same mesh substrate as
+    training.
+    """
+    return _ns(mesh, map_with_path(
+        lambda path, leaf: _decode_state_spec(path, leaf, mesh), a_state))
+
+
 def build_decode_step(cfg: ArchConfig, mesh, shape: InputShape,
                       long_context: bool = False) -> StepBundle:
     B = shape.global_batch
@@ -324,8 +338,7 @@ def build_decode_step(cfg: ArchConfig, mesh, shape: InputShape,
     token = inputs_lib.decode_token_spec(cfg, shape)
     moe_mode = cfg.moe.shard_mode if cfg.moe else "expert"
     s_params = _ns(mesh, param_specs(a_params, mesh, "full", moe_mode))
-    s_state = _ns(mesh, map_with_path(
-        lambda path, leaf: _decode_state_spec(path, leaf, mesh), a_state))
+    s_state = decode_state_shardings(a_state, mesh)
     s_token = NamedSharding(mesh, _batch_leading_spec(mesh, token.shape, 1))
     a_out = jax.eval_shape(decode, a_params, token, a_state)
     out_sh = (NamedSharding(mesh, _batch_leading_spec(mesh, token.shape, 2)),

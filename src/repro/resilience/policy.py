@@ -66,6 +66,10 @@ class RecoveryController:
         self.sleep = sleep
         self.ring: deque = deque(maxlen=cfg.ring_size)  # (rnd, state, ema)
         self.quarantined: set[int] = set()
+        # (round, ids) per quarantine event — the replayable form of the
+        # ledger: resume rebuilds `quarantined` as of any past round from
+        # this, so a restored run's cohort draws match the original's
+        self.quarantine_history: list[tuple[int, tuple[int, ...]]] = []
         self.rows: list[dict] = []
         self.totals = {"retries": 0, "rollbacks": 0,
                        "quarantine_events": 0, "faulted_rounds": 0,
@@ -119,7 +123,8 @@ class RecoveryController:
 
     # -------------------------------------------------------- quarantine
     def quarantine(self, cohort: np.ndarray, mask: np.ndarray,
-                   slot_bad: np.ndarray) -> Optional[np.ndarray]:
+                   slot_bad: np.ndarray,
+                   rnd: Optional[int] = None) -> Optional[np.ndarray]:
         """Blame -> new mask + ledger update; None when inapplicable.
 
         Inapplicable when no LIVE slot with a real client id is blamed,
@@ -138,6 +143,8 @@ class RecoveryController:
             return None
         ids = sorted(int(c) for c in cohort[bad])
         self.quarantined.update(ids)
+        self.quarantine_history.append(
+            (-1 if rnd is None else int(rnd), tuple(ids)))
         self.totals["quarantine_events"] += 1
         self.log(f"[resilience] quarantined clients {ids} "
                  f"({len(self.quarantined)} total)")
@@ -161,6 +168,52 @@ class RecoveryController:
         if (w > 0).sum() < max(self.min_live, 1):
             return base
         return w
+
+    # ------------------------------------------------------- persistence
+    def export_state(self) -> dict:
+        """JSON-serializable controller state for checkpoint metadata.
+
+        Covers the parts a resumed run must not forget: the quarantine
+        ledger (set + per-round event history, so sampling replay can
+        reconstruct the set as of any round), the accepted-round count
+        (the spike-warmup gate), and the recovery totals.  The snapshot
+        ring and telemetry rows are deliberately NOT persisted — ring
+        entries are live device pytrees (the checkpoint itself is the
+        last-good state after a resume) and rows are per-run telemetry.
+        """
+        return {
+            "quarantined": sorted(self.quarantined),
+            "quarantine_history": [[r, list(ids)]
+                                   for r, ids in self.quarantine_history],
+            "accepted": self._accepted,
+            "totals": {**{k: v for k, v in self.totals.items()
+                          if k != "faults"},
+                       "faults": dict(self.totals["faults"])},
+        }
+
+    def restore_state(self, d: dict) -> None:
+        """Inverse of :meth:`export_state` (tolerates older metadata
+        missing keys: absent fields keep their fresh-run defaults)."""
+        self.quarantined = set(int(c) for c in d.get("quarantined", ()))
+        self.quarantine_history = [
+            (int(r), tuple(int(c) for c in ids))
+            for r, ids in d.get("quarantine_history", ())]
+        self._accepted = int(d.get("accepted", 0))
+        totals = d.get("totals", {})
+        for k in self.totals:
+            if k == "faults":
+                for fk in self.totals["faults"]:
+                    self.totals["faults"][fk] = int(
+                        totals.get("faults", {}).get(fk, 0))
+            else:
+                self.totals[k] = int(totals.get(k, self.totals[k]))
+
+    def quarantined_as_of(self, rnd: int) -> set[int]:
+        """The quarantine set as of the START of round ``rnd`` (events
+        from earlier rounds only) — the set the original run's sampler
+        saw when drawing round ``rnd``'s cohort."""
+        return {int(c) for r, ids in self.quarantine_history if r < rnd
+                for c in ids}
 
     # --------------------------------------------------------- telemetry
     def record_round(self, rnd: int, attempts: int, kinds: list[str],

@@ -1,0 +1,21 @@
+"""Continuous-batching split-serving subsystem.
+
+The serving-side consumer of the training arc's mesh/config substrate:
+a fixed-slot continuous-batching runtime (:mod:`repro.serve.runtime`),
+its serializable knobs (:mod:`repro.serve.config`, hung off
+``ExperimentConfig.serve``), and a closed-loop load generator
+(:mod:`repro.serve.loadgen`) backing ``benchmarks/bench_serving.py``.
+"""
+from repro.serve.config import ServeConfig
+from repro.serve.loadgen import make_prompts, percentiles, run_closed_loop
+from repro.serve.runtime import (Request, ServeDispatchError, ServeRuntime,
+                                 STATUS_DONE, STATUS_EVICTED_DEADLINE,
+                                 STATUS_EVICTED_FAILURE, STATUS_QUEUED,
+                                 STATUS_REJECTED, STATUS_RUNNING, TERMINAL)
+
+__all__ = [
+    "ServeConfig", "ServeRuntime", "Request", "ServeDispatchError",
+    "run_closed_loop", "make_prompts", "percentiles",
+    "STATUS_QUEUED", "STATUS_RUNNING", "STATUS_DONE", "STATUS_REJECTED",
+    "STATUS_EVICTED_DEADLINE", "STATUS_EVICTED_FAILURE", "TERMINAL",
+]

@@ -1,0 +1,552 @@
+"""Continuous-batching split-serving runtime (vLLM-style slot reuse).
+
+The server stage of the split deployment consumes concurrent client
+token streams through a **fixed-capacity slot table**: ``slots``
+independent decode states stacked along a slot axis, advanced together
+by ONE jitted decode step per tick.  Admission and retirement are pure
+masking — a retired slot is handed to the next queued request without
+retracing — so the runtime compiles exactly one decode trace (plus one
+prefill trace and one admission-scatter trace) regardless of how
+requests arrive.  This is the serving-side twin of the training arc's
+compile-once padded cohorts: the live-slot mask plays the attendance
+mask's role.
+
+Dataflow per :meth:`ServeRuntime.step` (one tick):
+
+  1. retire   — slots whose generation budget is met hand back tokens;
+  2. deadline — expired queued requests are rejected (zero compute),
+                expired in-flight requests are evicted with their
+                partial output;
+  3. admit    — up to ``prefill_batch`` queued requests are prefilled
+                in ONE scanned dispatch (a ``lax.scan`` over prompt
+                positions through the same vmapped decode body — no
+                per-token python loop) and scattered into free slots;
+  4. decode   — one jitted step advances every live slot.
+
+Slot-reuse correctness comes for free from the ring-buffer cache math:
+:func:`repro.models.attention.attend_decode` masks cache entries via
+``k_pos = pos - ((pos - slot) % C) ; valid = k_pos >= 0``, so resetting
+a slot's ``pos`` to 0 at admission invalidates every stale entry the
+previous occupant left behind — no cache zeroing dispatch needed (the
+suite proves a reused slot is bit-for-bit a fresh runtime).
+
+Placement: the slot table IS a decode state (``[L, S, C, Hkv, Dh]``
+with the slot axis where the batch axis sits), so on a mesh it is
+placed with the exact decode-state shardings ``launch/steps.py`` lowers
+(:func:`repro.launch.steps.decode_state_shardings`), pinned as the
+jitted tick's ``out_shardings`` so layout is stable tick-over-tick.
+
+Robustness: every dispatch runs under a retry budget with exponential
+backoff; exhaustion evicts the affected slots and the runtime keeps
+serving (see :class:`~repro.serve.config.ServeConfig`).  ``clock`` /
+``sleep`` / ``fault_hook`` are injectable so the deadline and backoff
+paths are deterministic under test.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import Transformer
+from repro.serve.config import ServeConfig
+from repro.utils.tree import path_str
+
+# request terminal states
+STATUS_QUEUED = "queued"
+STATUS_RUNNING = "running"
+STATUS_DONE = "done"
+STATUS_REJECTED = "rejected_deadline"      # expired before admission
+STATUS_EVICTED_DEADLINE = "evicted_deadline"
+STATUS_EVICTED_FAILURE = "evicted_failure"
+TERMINAL = (STATUS_DONE, STATUS_REJECTED, STATUS_EVICTED_DEADLINE,
+            STATUS_EVICTED_FAILURE)
+
+
+class ServeDispatchError(RuntimeError):
+    """A dispatch failed on every retry attempt."""
+
+    def __init__(self, site: str, attempts: int, cause: Exception):
+        super().__init__(f"{site} dispatch failed after {attempts} "
+                         f"attempts: {cause!r}")
+        self.site = site
+        self.attempts = attempts
+        self.cause = cause
+
+
+@dataclass
+class Request:
+    """One client stream: prompt in, up to ``max_new`` greedy tokens out.
+
+    The first output token is the one the prefilled prompt predicts
+    (argmax of the prefill logits) — time-to-first-token is the prefill
+    dispatch, not a decode tick.
+    """
+    rid: int
+    prompt: np.ndarray                 # int32 [len], 1 <= len <= budget
+    max_new: int
+    deadline_s: float
+    submitted: float
+    status: str = STATUS_QUEUED
+    admitted: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finished: Optional[float] = None
+    slot: Optional[int] = None
+    retries: int = 0                   # dispatch retries this request saw
+    tokens: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int32))
+
+    @property
+    def deadline(self) -> float:
+        return self.submitted + self.deadline_s
+
+    def record(self) -> dict:
+        lat = (self.finished - self.submitted
+               if self.finished is not None else None)
+        ttft = (self.first_token_t - self.submitted
+                if self.first_token_t is not None else None)
+        return {"rid": self.rid, "status": self.status,
+                "prompt_len": int(len(self.prompt)),
+                "n_tokens": int(len(self.tokens)),
+                "latency_s": lat, "ttft_s": ttft, "retries": self.retries}
+
+
+class ServeRuntime:
+    """Fixed-slot continuous-batching server for decoder-only archs."""
+
+    def __init__(self, arch: ArchConfig, serve: ServeConfig, *,
+                 params=None, seed: int = 0, mesh=None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 fault_hook: Optional[Callable[[str, int, int], None]] = None,
+                 log=None):
+        if arch.family == "audio":
+            raise ValueError("ServeRuntime serves decoder-only archs; "
+                             "audio (enc-dec) uses launch.serve.serve_whisper")
+        self.arch = arch
+        self.serve = serve.validate()
+        self.mesh = mesh
+        self.clock = clock
+        self.sleep = sleep
+        self.fault_hook = fault_hook
+        self.log = log or (lambda *a: None)
+        self.slots = serve.slots
+        self.max_new = serve.max_new_tokens
+        self.cap = serve.max_prompt_len + serve.max_new_tokens
+
+        from repro.sharding.specs import set_activation_mesh
+        set_activation_mesh(mesh)
+        if params is None:
+            params = Transformer.init(jax.random.PRNGKey(seed), arch)
+        self.params = params
+
+        # ---- slot-axis rules: the slot table is a decode state with the
+        # batch dim as the slot dim; per-sequence scalars (pos, ring idx)
+        # stack along a fresh leading axis.  Paths are the checkpoint /
+        # steps.py '/'-joined paths, so the decode-state sharding rules
+        # apply to the table verbatim.
+        mono = jax.eval_shape(
+            lambda: Transformer.init_decode_state(arch, 1, self.cap))
+        self._axis: dict[str, int] = {}     # path -> slot axis in the table
+        self._stacked: dict[str, bool] = {}  # False: scalar-derived leaf
+        flat, _ = jax.tree_util.tree_flatten_with_path(mono)
+        for kp, leaf in flat:
+            p = path_str(kp)
+            stacked = len(leaf.shape) > 0
+            ax = 1 if stacked else 0    # every batched decode leaf is
+            self._axis[p] = ax          # [L, B, ...]; scalars become [S]
+            self._stacked[p] = stacked
+            assert not stacked or leaf.shape[1] == 1, p
+        self.state = self._zero_slot_state(self.slots)
+        self.cur_tok = jnp.zeros((self.slots,), jnp.int32)
+        self.counts = jnp.zeros((self.slots,), jnp.int32)
+        self.out_buf = jnp.zeros((self.slots, self.max_new), jnp.int32)
+        self._chunk_zero = self._zero_slot_state(serve.prefill_batch)
+
+        # ---- compile-once claim instrumentation: each counter counts
+        # python-body executions of a jitted function = XLA traces
+        self.traces = {"prefill": 0, "admit": 0, "decode": 0}
+        self._build_steps()
+        if mesh is not None:
+            self._place_on_mesh()
+
+        # ---- host-side scheduler state
+        self.queue: deque[Request] = deque()
+        self.slot_req: list[Optional[Request]] = [None] * self.slots
+        self.free: list[int] = list(range(self.slots))[::-1]
+        self.counts_host = np.zeros(self.slots, np.int64)
+        self.results: dict[int, Request] = {}
+        self.assignments = np.zeros(self.slots, np.int64)
+        self._tick = 0
+        self._next_rid = 0
+        self.dispatch_retries = 0
+        self.evictions = {"deadline": 0, "failure": 0, "rejected": 0}
+
+    # ------------------------------------------------------------ build
+    def _zero_slot_state(self, n: int):
+        mono = jax.eval_shape(
+            lambda: Transformer.init_decode_state(self.arch, 1, self.cap))
+
+        def leaf(kp, l):
+            p = path_str(kp)
+            if not self._stacked.get(p, len(l.shape) > 0):
+                return jnp.zeros((n,), l.dtype)
+            shape = list(l.shape)
+            shape[1] = n
+            return jnp.zeros(shape, l.dtype)
+
+        return jax.tree_util.tree_map_with_path(leaf, mono)
+
+    def _slot_ax(self, p: str) -> int:
+        return self._axis[p] if self._stacked[p] else 0
+
+    def _where_slot(self, mask, new, old):
+        """Per-slot select over a slot-table pytree (mask [S] bool)."""
+
+        def sel(kp, n, o):
+            ax = self._slot_ax(path_str(kp))
+            shape = [1] * n.ndim
+            shape[ax] = n.shape[ax]
+            return jnp.where(mask.reshape(shape), n, o)
+
+        return jax.tree_util.tree_map_with_path(sel, new, old)
+
+    def _build_steps(self):
+        arch = self.arch
+        axes = jax.tree_util.tree_map_with_path(
+            lambda kp, _: self._slot_ax(path_str(kp)), self.state)
+
+        def one(params, tok, state):
+            # inner adapter: re-insert the singleton batch dim the
+            # unchanged decode_step expects; per-sequence scalars (pos,
+            # ring idx) arrive already scalar from the slot axis
+            full = jax.tree_util.tree_map_with_path(
+                lambda kp, l: (jnp.expand_dims(l, self._axis[path_str(kp)])
+                               if self._stacked[path_str(kp)] else l), state)
+            logits, new = Transformer.decode_step(params, arch, tok[None],
+                                                  full)
+            new = jax.tree_util.tree_map_with_path(
+                lambda kp, l: (jnp.squeeze(l, self._axis[path_str(kp)])
+                               if self._stacked[path_str(kp)] else l), new)
+            return logits[0], new
+
+        # one decode body, vmapped over the slot axis — tok [S,1],
+        # state slot-table -> (logits [S,1,V], state')
+        self._vstep = jax.vmap(one, in_axes=(None, 0, axes),
+                               out_axes=(0, axes))
+        S, M, Pb = self.slots, self.max_new, self.serve.prefill_batch
+        P = self.serve.max_prompt_len
+
+        def decode_fn(params, state, cur_tok, live, counts, out_buf):
+            self.traces["decode"] += 1
+            lg, st2 = self._vstep(params, cur_tok[:, None], state)
+            state = self._where_slot(live, st2, state)
+            tok = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+            tok = jnp.where(live, tok, cur_tok)
+            idx = jnp.clip(counts, 0, M - 1)
+            rows = jnp.arange(S)
+            out_buf = out_buf.at[rows, idx].set(
+                jnp.where(live, tok, out_buf[rows, idx]))
+            counts = counts + live.astype(jnp.int32)
+            return state, tok, counts, out_buf
+
+        def prefill_fn(params, tokens, lens, state):
+            # batched prefill: ONE dispatch scans the whole prompt
+            # budget through the same vmapped decode body, masking rows
+            # past their length — bit-equal to per-token stepping by
+            # construction (jnp.where passes the active rows' bits
+            # through untouched)
+            self.traces["prefill"] += 1
+
+            def body(carry, i):
+                st, logits = carry
+                tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+                lg, st2 = self._vstep(params, tok, st)
+                st = self._where_slot(i < lens, st2, st)
+                logits = jnp.where((i == lens - 1)[:, None, None], lg,
+                                   logits)
+                return (st, logits), None
+
+            init = (state, jnp.zeros((Pb, 1, arch.vocab), jnp.float32))
+            (st, logits), _ = jax.lax.scan(
+                body, init, jnp.arange(P, dtype=jnp.int32))
+            first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return st, first
+
+        def admit_fn(state, cur_tok, counts, out_buf, cstate, first,
+                     slot_ids, admit):
+            # scatter a prefilled chunk into its (host-chosen, distinct)
+            # slots; non-admitted rows carry unused slot ids and write
+            # their targets' own values back (a structural no-op)
+            self.traces["admit"] += 1
+
+            def sc(kp, leaf, cleaf):
+                p = path_str(kp)
+                if self._stacked[p]:
+                    m = admit.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+                    upd = jnp.where(m, cleaf, leaf[:, slot_ids])
+                    return leaf.at[:, slot_ids].set(upd)
+                m = admit.reshape((-1,) + (1,) * (leaf.ndim - 1))
+                upd = jnp.where(m, cleaf, leaf[slot_ids])
+                return leaf.at[slot_ids].set(upd)
+
+            state = jax.tree_util.tree_map_with_path(sc, state, cstate)
+            cur_tok = cur_tok.at[slot_ids].set(
+                jnp.where(admit, first, cur_tok[slot_ids]))
+            counts = counts.at[slot_ids].set(
+                jnp.where(admit, 1, counts[slot_ids]))
+            out_buf = out_buf.at[slot_ids, 0].set(
+                jnp.where(admit, first, out_buf[slot_ids, 0]))
+            return state, cur_tok, counts, out_buf
+
+        if self.mesh is None:
+            self._decode = jax.jit(decode_fn)
+            self._prefill = jax.jit(prefill_fn)
+            self._admit = jax.jit(admit_fn)
+            return
+        # mesh placement: the slot table takes the decode-state rules
+        # from launch/steps.py verbatim (slot axis = batch axis), the
+        # per-slot vectors ride the batch axes, and every tick's outputs
+        # are pinned to the same shardings so layout is stable
+        from jax.sharding import NamedSharding
+        from repro.launch.steps import (_batch_leading_spec,
+                                        decode_state_shardings)
+        s_state = decode_state_shardings(self.state, self.mesh)
+        s_chunk = decode_state_shardings(self._chunk_zero, self.mesh)
+
+        def vec(shape):
+            return NamedSharding(self.mesh, _batch_leading_spec(
+                self.mesh, shape, len(shape) - 1))
+
+        s_tok, s_counts = vec((S,)), vec((S,))
+        s_buf, s_first = vec((S, M)), vec((Pb,))
+        self._decode = jax.jit(
+            decode_fn,
+            out_shardings=(s_state, s_tok, s_counts, s_buf))
+        self._prefill = jax.jit(prefill_fn,
+                                out_shardings=(s_chunk, s_first))
+        self._admit = jax.jit(
+            admit_fn, out_shardings=(s_state, s_tok, s_counts, s_buf))
+        self._s_state, self._s_chunk, self._vec = s_state, s_chunk, vec
+
+    def _place_on_mesh(self):
+        from repro.launch.steps import _ns
+        from repro.sharding.specs import param_specs
+        moe_mode = self.arch.moe.shard_mode if self.arch.moe else "expert"
+        self.params = jax.device_put(
+            self.params,
+            _ns(self.mesh, param_specs(self.params, self.mesh, "full",
+                                       moe_mode)))
+        self.state = jax.device_put(self.state, self._s_state)
+        self._chunk_zero = jax.device_put(self._chunk_zero, self._s_chunk)
+        self.cur_tok = jax.device_put(self.cur_tok, self._vec((self.slots,)))
+        self.counts = jax.device_put(self.counts, self._vec((self.slots,)))
+        self.out_buf = jax.device_put(
+            self.out_buf, self._vec((self.slots, self.max_new)))
+
+    # --------------------------------------------------------- dispatch
+    def _dispatch(self, site: str, fn, *args):
+        """Run one jitted dispatch under the retry/backoff budget."""
+        last = None
+        for attempt in range(self.serve.max_retries + 1):
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(site, self._tick, attempt)
+                out = fn(*args)
+            except Exception as e:      # noqa: BLE001 — any dispatch fault
+                last = e
+                self.dispatch_retries += int(
+                    attempt < self.serve.max_retries)
+                if attempt < self.serve.max_retries:
+                    if self.serve.backoff_base_s > 0:
+                        self.sleep(self.serve.backoff_base_s
+                                   * (2.0 ** attempt))
+                    continue
+                raise ServeDispatchError(site, attempt + 1, e) from e
+            return out, attempt
+        raise ServeDispatchError(site, self.serve.max_retries + 1, last)
+
+    # ----------------------------------------------------------- submit
+    def submit(self, prompt: Sequence[int], *, max_new: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> int:
+        """Enqueue one request; returns its rid.  An empty prompt is a
+        BOS-0 prompt (matching ``serve_decoder_only``'s prompt_len=0
+        semantics: generation starts from token 0's prediction)."""
+        toks = np.asarray(list(prompt) or [0], np.int32)
+        if len(toks) > self.serve.max_prompt_len:
+            raise ValueError(
+                f"prompt of {len(toks)} tokens exceeds the static budget "
+                f"serve.max_prompt_len={self.serve.max_prompt_len}")
+        if (toks < 0).any() or (toks >= self.arch.vocab).any():
+            raise ValueError("prompt token out of vocab range")
+        mn = self.max_new if max_new is None else int(max_new)
+        if not 1 <= mn <= self.max_new:
+            raise ValueError(f"max_new={mn} must be in [1, "
+                             f"{self.max_new}]")
+        req = Request(rid=self._next_rid, prompt=toks, max_new=mn,
+                      deadline_s=(self.serve.deadline_s if deadline_s is None
+                                  else float(deadline_s)),
+                      submitted=self.clock())
+        self._next_rid += 1
+        self.queue.append(req)
+        self.results[req.rid] = req
+        return req.rid
+
+    # ------------------------------------------------------- scheduling
+    def live_requests(self) -> list[Request]:
+        return [r for r in self.slot_req if r is not None]
+
+    @property
+    def n_live(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def _retire(self, slot: int, status: str, now: float):
+        req = self.slot_req[slot]
+        n = int(self.counts_host[slot])
+        req.tokens = np.asarray(
+            jax.device_get(self.out_buf[slot, :n])).astype(np.int32)
+        req.status = status
+        req.finished = now
+        self.slot_req[slot] = None
+        self.counts_host[slot] = 0
+        self.free.append(slot)
+
+    def _evict_chunk(self, chunk: list[Request], slots: list[int],
+                     attempts: int, now: float):
+        for r in chunk:
+            r.retries += attempts - 1
+            r.status = STATUS_EVICTED_FAILURE
+            r.finished = now
+            self.evictions["failure"] += 1
+        self.free.extend(slots)
+
+    def step(self) -> None:
+        """One scheduler tick: retire / expire / admit / decode."""
+        now = self.clock()
+        self._tick += 1
+        # 1. retire slots whose generation budget is met
+        for s, req in enumerate(self.slot_req):
+            if req is not None and self.counts_host[s] >= req.max_new:
+                self._retire(s, STATUS_DONE, now)
+        # 2. deadlines: expired in-flight slots are evicted with their
+        # partial output; expired queued requests never consume compute
+        for s, req in enumerate(self.slot_req):
+            if req is not None and now > req.deadline:
+                self._retire(s, STATUS_EVICTED_DEADLINE, now)
+                self.evictions["deadline"] += 1
+        kept = deque()
+        for req in self.queue:
+            if now > req.deadline:
+                req.status = STATUS_REJECTED
+                req.finished = now
+                self.evictions["rejected"] += 1
+            else:
+                kept.append(req)
+        self.queue = kept
+        # 3. admission: chunked batched prefill into free slots
+        while self.queue and self.free:
+            self._admit_chunk(now)
+        # 4. decode: one jitted step advances every live slot
+        live_idx = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if not live_idx:
+            return
+        live = np.zeros(self.slots, bool)
+        live[live_idx] = True
+        try:
+            (self.state, self.cur_tok, self.counts, self.out_buf), att = \
+                self._dispatch("decode", self._decode, self.params,
+                               self.state, self.cur_tok, jnp.asarray(live),
+                               self.counts, self.out_buf)
+        except ServeDispatchError:
+            # decode failures carry no per-slot blame — evict every live
+            # slot with its partial output and keep the runtime serving
+            self.log(f"[serve] decode dispatch exhausted at tick "
+                     f"{self._tick}; evicting {len(live_idx)} live slots")
+            for s in live_idx:
+                self.slot_req[s].retries += self.serve.max_retries
+                self._retire(s, STATUS_EVICTED_FAILURE, now)
+                self.evictions["failure"] += 1
+            return
+        if att:
+            for s in live_idx:
+                self.slot_req[s].retries += att
+        self.counts_host[live_idx] += 1
+
+    def _admit_chunk(self, now: float) -> None:
+        Pb = self.serve.prefill_batch
+        n = min(len(self.queue), len(self.free), Pb)
+        chunk = [self.queue.popleft() for _ in range(n)]
+        slots = [self.free.pop() for _ in range(n)]
+        # pad the chunk's scatter targets with DISTINCT unused slots so
+        # the jitted scatter never sees duplicate indices (Pb <= slots
+        # guarantees enough spares among free + live-but-untouched)
+        spare = [s for s in self.free if s not in slots]
+        spare += [s for s in range(self.slots)
+                  if s not in slots and s not in spare]
+        slot_ids = np.asarray(slots + spare[:Pb - n], np.int32)
+        admit = np.zeros(Pb, bool)
+        admit[:n] = True
+        tokens = np.zeros((Pb, self.serve.max_prompt_len), np.int32)
+        lens = np.zeros(Pb, np.int32)
+        for i, r in enumerate(chunk):
+            tokens[i, :len(r.prompt)] = r.prompt
+            lens[i] = len(r.prompt)
+        try:
+            (cstate, first), att = self._dispatch(
+                "prefill", self._prefill, self.params,
+                jnp.asarray(tokens), jnp.asarray(lens), self._chunk_zero)
+        except ServeDispatchError:
+            self.log(f"[serve] prefill dispatch exhausted at tick "
+                     f"{self._tick}; evicting {n} queued requests")
+            self._evict_chunk(chunk, slots, self.serve.max_retries + 1, now)
+            return
+        (self.state, self.cur_tok, self.counts, self.out_buf), _ = \
+            self._dispatch("admit", self._admit, self.state, self.cur_tok,
+                           self.counts, self.out_buf, cstate, first,
+                           jnp.asarray(slot_ids), jnp.asarray(admit))
+        t_first = self.clock()
+        for i, r in enumerate(chunk):
+            r.status = STATUS_RUNNING
+            r.slot = slots[i]
+            r.admitted = now
+            r.first_token_t = t_first
+            r.retries += att
+            self.slot_req[slots[i]] = r
+            self.counts_host[slots[i]] = 1
+            self.assignments[slots[i]] += 1
+
+    def drain(self, max_ticks: int = 100_000) -> None:
+        """Step until the queue and slot table are empty."""
+        ticks = 0
+        while self.queue or self.n_live:
+            self.step()
+            ticks += 1
+            if ticks >= max_ticks:
+                raise RuntimeError(
+                    f"serve drain made no progress in {max_ticks} ticks "
+                    f"({len(self.queue)} queued, {self.n_live} live)")
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        reqs = list(self.results.values())
+        by = {s: sum(r.status == s for r in reqs) for s in TERMINAL}
+        return {
+            "requests": len(reqs),
+            "by_status": by,
+            "tokens_out": int(sum(len(r.tokens) for r in reqs)),
+            "ticks": self._tick,
+            "dispatch_retries": self.dispatch_retries,
+            "evictions": dict(self.evictions),
+            "slot_assignments": self.assignments.tolist(),
+            "max_slot_reuse": int(self.assignments.max(initial=0)),
+            "traces": dict(self.traces),
+        }
+
+    def records(self) -> list[dict]:
+        return [self.results[rid].record() for rid in sorted(self.results)]

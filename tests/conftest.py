@@ -15,6 +15,11 @@ def pytest_configure(config):
         "resilience: fault-injection and crash/resume suites (the CI "
         "'resilience' leg runs `-m resilience` under 8 forced host "
         "devices and uploads BENCH_resilience.json)")
+    config.addinivalue_line(
+        "markers",
+        "serving: continuous-batching serve runtime suite (the CI "
+        "'serving' leg runs `-m serving` under 8 forced host devices "
+        "and uploads BENCH_serving.json)")
 
 
 @pytest.fixture

@@ -37,8 +37,9 @@ from repro.core.split import make_stage_task
 from repro.data.federated import FederatedDataset
 from repro.models.cnn import mlp
 from repro.resilience import (ACTIONS, FaultConfig, FaultInjectedError,
-                              FaultStream, ResilienceConfig,
-                              build_fault_stream, quarantine_mask)
+                              FaultStream, RecoveryController,
+                              ResilienceConfig, build_fault_stream,
+                              quarantine_mask)
 
 pytestmark = pytest.mark.resilience
 
@@ -373,6 +374,113 @@ def _harness_args(ckpt_dir, rounds=6, **kw):
 
 def _strip(rows):
     return [{k: v for k, v in r.items() if k != "elapsed_s"} for r in rows]
+
+
+QUARANTINE_FAULTS = ResilienceConfig(
+    guard=True, on_nonfinite="quarantine",
+    faults=FaultConfig(nan_rate=0.6, persist=10))
+
+
+@pytest.mark.parametrize("pipeline", [0, 1])
+def test_quarantine_ledger_survives_resume(pipeline, setup, tmp_path):
+    """Resume must be behavior-identical UNDER RECOVERY: the quarantine
+    ledger, its per-round event history, and the spike-EMA carry are
+    persisted in checkpoint metadata, so a resumed run keeps its bans
+    (and replays the original's weighted cohort draws exactly) instead
+    of silently re-admitting poisoned clients."""
+    task, fed = setup
+    base = dict(rounds=6, eval_every=3, pipeline_depth=pipeline,
+                resilience=QUARANTINE_FAULTS)
+    _, golden = _run(_cfg(ckpt_dir=str(tmp_path / "g"), **base), task, fed)
+    assert golden["resilience"]["quarantined_clients"], \
+        "fixture must actually quarantine someone"
+    # partial run to round 3, then a FRESH engine resumes to 6
+    ck = str(tmp_path / "p")
+    _run(_cfg(ckpt_dir=ck, **{**base, "rounds": 3}), task, fed)
+    eng, resumed = _run(_cfg(ckpt_dir=ck, resume=True, **base), task, fed)
+    assert resumed["resumed_from_round"] == 3
+    # the restored ledger + history-aware sampling replay reproduce the
+    # uninterrupted run bit-for-bit
+    want = {r["round"]: r for r in golden["history"]}
+    for row in resumed["history"]:
+        assert row == want[row["round"]], row["round"]
+    assert resumed["resilience"]["quarantined_clients"] == \
+        golden["resilience"]["quarantined_clients"]
+    assert resumed["resilience"]["quarantine_events"] == \
+        golden["resilience"]["quarantine_events"]
+    # the event history itself round-trips through export/restore
+    state = eng.recovery.export_state()
+    fresh = RecoveryController(QUARANTINE_FAULTS, N, log=lambda *a: None)
+    fresh.restore_state(state)
+    assert fresh.quarantined == eng.recovery.quarantined
+    assert fresh.quarantine_history == eng.recovery.quarantine_history
+    assert fresh.export_state() == state
+
+
+def test_resume_without_ledger_metadata_keeps_fresh_controller(
+        setup, tmp_path):
+    """Older checkpoints (no 'resilience' metadata) resume with a clean
+    controller instead of crashing — forward-compat only, by design."""
+    task, fed = setup
+    ck = str(tmp_path / "ck")
+    _run(_cfg(rounds=3, eval_every=3, ckpt_dir=ck), task, fed)  # no guard
+    cfg = _cfg(rounds=6, eval_every=3, ckpt_dir=ck, resume=True,
+               resilience=QUARANTINE_FAULTS)
+    eng, res = _run(cfg, task, fed)
+    assert res["resumed_from_round"] == 3
+    assert all(np.isfinite(r["test_loss"]) for r in res["history"])
+
+
+def test_sigkill_resume_keeps_bans(tmp_path):
+    """The subprocess variant of the ledger golden: SIGKILL a guarded
+    run with persistent NaN clients mid-flight, resume, and prove the
+    bans and history tail survive the crash bit-for-bit."""
+    from repro.resilience import harness
+    spec = "nan=0.6,persist=10"
+    golden = harness.build_engine(
+        _harness_args(str(tmp_path / "golden"), guard=True,
+                      faults=spec)).run()
+    assert golden["resilience"]["quarantined_clients"]
+    ck = str(tmp_path / "ck")
+    env = dict(os.environ, PYTHONPATH="src")
+    cwd = os.path.dirname(os.path.dirname(__file__))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.resilience.harness",
+         "--ckpt-dir", ck, "--rounds", "6", "--clients", str(N),
+         "--batch", "4", "--guard", "--faults", spec,
+         "--sleep-per-round", "0.5"],
+        env=env, cwd=cwd,
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    try:
+        deadline = time.time() + 180
+        while time.time() < deadline:
+            if latest_step(ck) is not None and latest_step(ck) >= 2:
+                break
+            if proc.poll() is not None:
+                pytest.fail("harness exited before checkpointing")
+            time.sleep(0.05)
+        else:
+            pytest.fail("harness never wrote step_2")
+        os.kill(proc.pid, signal.SIGKILL)
+    finally:
+        proc.wait()
+    killed_at = latest_step(ck)
+    assert killed_at is not None and killed_at < 6
+    out = str(tmp_path / "resumed.json")
+    subprocess.run(
+        [sys.executable, "-m", "repro.resilience.harness",
+         "--ckpt-dir", ck, "--rounds", "6", "--clients", str(N),
+         "--batch", "4", "--guard", "--faults", spec,
+         "--resume", "--out", out],
+        env=env, cwd=cwd, check=True,
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL, timeout=300)
+    resumed = json.load(open(out))
+    assert resumed["resumed_from_round"] == killed_at
+    want = {r["round"]: r for r in _strip(golden["history"])}
+    for row in _strip(resumed["history"]):
+        assert row == want[row["round"]], row["round"]
+    assert resumed["resilience"]["quarantined_clients"] == \
+        golden["resilience"]["quarantined_clients"]
 
 
 def test_sigkill_mid_round_resume_bit_for_bit(tmp_path):

@@ -1,0 +1,356 @@
+"""Continuous-batching serve runtime contracts.
+
+The load-bearing claims, each pinned here:
+
+* compile-once — ONE jitted trace each for prefill / admit / decode
+  across wildly different arrival patterns on one runtime;
+* slot-reuse correctness — a retired slot's ring-buffer cache never
+  leaks into the next request admitted to that slot (bit-for-bit a
+  fresh runtime);
+* batched prefill — the single scanned prefill dispatch is bit-equal
+  to stepping the prompt per-token through the same decode body;
+* deadlines — expired queued requests are rejected without compute,
+  expired in-flight requests are evicted with their partial output;
+* retry/backoff — failed dispatches retry on the exponential-backoff
+  schedule, and exhaustion evicts only the affected work, leaving the
+  runtime serving.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.config import ExperimentConfig
+from repro.configs.gemma2_2b import smoke as gemma_smoke
+from repro.configs.mamba2_2p7b import smoke as mamba_smoke
+from repro.models.transformer import Transformer
+from repro.serve import (ServeConfig, ServeDispatchError, ServeRuntime,
+                         STATUS_DONE, STATUS_EVICTED_DEADLINE,
+                         STATUS_EVICTED_FAILURE, STATUS_REJECTED,
+                         make_prompts, run_closed_loop)
+
+pytestmark = pytest.mark.serving
+
+
+class FakeClock:
+    """Deterministic injectable clock; sleeps advance it."""
+
+    def __init__(self):
+        self.t = 0.0
+        self.sleeps = []
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+    def sleep(self, dt):
+        self.sleeps.append(dt)
+        self.t += dt
+
+
+SC = ServeConfig(slots=4, max_prompt_len=6, max_new_tokens=5,
+                 prefill_batch=2)
+
+
+@pytest.fixture(scope="module")
+def arch():
+    return gemma_smoke()
+
+
+@pytest.fixture(scope="module")
+def runtime(arch):
+    """One module-scoped runtime — reused so the trace counters span
+    every arrival pattern the tests throw at it."""
+    return ServeRuntime(arch, SC, seed=0)
+
+
+def _greedy_reference(rt, prompt, n_new):
+    """Per-token reference: the legacy serve loop's exact computation."""
+    arch, sc = rt.arch, rt.serve
+    state = Transformer.init_decode_state(
+        arch, 1, sc.max_prompt_len + sc.max_new_tokens)
+    step = jax.jit(lambda p, t, s: Transformer.decode_step(p, arch, t, s))
+    logits = None
+    for t in (list(prompt) or [0]):
+        logits, state = step(rt.params, jnp.asarray([[t]], jnp.int32), state)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(n_new - 1):
+        logits, state = step(rt.params,
+                             jnp.asarray([[out[-1]]], jnp.int32), state)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+def test_compile_once_across_arrival_patterns(runtime):
+    rt = runtime
+    # pattern 1: sequential singles
+    for i in range(3):
+        rt.submit([1 + i], max_new=2)
+        rt.drain()
+    # pattern 2: a burst over capacity (queueing + slot reuse)
+    for i in range(9):
+        rt.submit([2, 3, 4][: 1 + i % 3], max_new=3)
+    rt.drain()
+    # pattern 3: staggered arrivals mid-flight
+    rt.submit([5, 6], max_new=4)
+    rt.step()
+    rt.submit([7], max_new=2)
+    rt.step()
+    rt.submit([1, 2, 3, 4, 5, 6], max_new=3)
+    rt.drain()
+    assert all(r.status == STATUS_DONE for r in rt.results.values())
+    # THE claim: one trace per jitted site, regardless of arrivals
+    assert rt.traces == {"prefill": 1, "admit": 1, "decode": 1}
+    assert rt.stats()["max_slot_reuse"] > 1
+
+
+def test_output_matches_per_token_reference(runtime):
+    rt = runtime
+    prompts = [[1, 2, 3], [9], [4, 5, 6, 7, 8, 2]]
+    rids = [rt.submit(p, max_new=4) for p in prompts]
+    rt.drain()
+    for p, rid in zip(prompts, rids):
+        assert rt.results[rid].tokens.tolist() == \
+            _greedy_reference(rt, p, 4), p
+
+
+def test_empty_prompt_is_bos_zero(runtime):
+    rid = runtime.submit([], max_new=3)
+    runtime.drain()
+    assert runtime.results[rid].tokens.tolist() == \
+        _greedy_reference(runtime, [], 3)
+
+
+def test_slot_reuse_never_leaks(arch):
+    """A request served in a REUSED slot is bit-for-bit a fresh runtime:
+    the ring-buffer position reset invalidates every stale cache entry
+    the previous occupant left (no cache zeroing dispatch exists)."""
+    sc = ServeConfig(slots=1, max_prompt_len=6, max_new_tokens=5,
+                     prefill_batch=1)
+    rt = ServeRuntime(arch, sc, seed=0)
+    # occupant 1 fills the slot's cache to a different occupancy/content
+    rt.submit([3, 1, 4, 1, 5, 9], max_new=5)
+    rt.drain()
+    # occupant 2 reuses slot 0
+    rid = rt.submit([2, 7], max_new=5)
+    rt.drain()
+    assert rt.assignments[0] == 2
+    fresh = ServeRuntime(arch, sc, seed=0)
+    frid = fresh.submit([2, 7], max_new=5)
+    fresh.drain()
+    assert rt.results[rid].tokens.tolist() == \
+        fresh.results[frid].tokens.tolist()
+
+
+def test_batched_prefill_bit_equals_per_token(runtime):
+    """One scanned chunk with MIXED lengths vs per-token stepping of
+    each row through the same vmapped body."""
+    rt = runtime
+    tokens = np.zeros((SC.prefill_batch, SC.max_prompt_len), np.int32)
+    rows = [[3, 1, 4, 1, 5], [2, 7, 1]]
+    lens = np.asarray([len(r) for r in rows], np.int32)
+    for i, r in enumerate(rows):
+        tokens[i, :len(r)] = r
+    (cstate, first), _ = rt._dispatch(
+        "prefill", rt._prefill, rt.params, jnp.asarray(tokens),
+        jnp.asarray(lens), rt._chunk_zero)
+    # reference: step each row alone per-token (vmap rows are
+    # independent, so a singleton runtime is an exact reference)
+    for i, row in enumerate(rows):
+        assert int(first[i]) == _greedy_reference(rt, row, 1)[0], i
+    # the prefilled state must carry the row's true length as pos
+    pos = np.asarray(jax.device_get(cstate["pos"]))
+    assert pos.tolist() == lens.tolist()
+
+
+def test_deadline_rejects_queued_and_evicts_inflight(arch):
+    clk = FakeClock()
+    sc = ServeConfig(slots=1, max_prompt_len=4, max_new_tokens=8,
+                     prefill_batch=1, deadline_s=100.0)
+    rt = ServeRuntime(arch, sc, seed=0, clock=clk, sleep=clk.sleep)
+    slow = rt.submit([1, 2], deadline_s=5.0)     # will expire in flight
+    queued = rt.submit([3], deadline_s=5.0)      # will expire queued
+    rt.step()                                    # admits `slow` only
+    assert rt.results[slow].status == "running"
+    clk.advance(10.0)                            # both deadlines pass
+    rt.step()
+    assert rt.results[slow].status == STATUS_EVICTED_DEADLINE
+    assert len(rt.results[slow].tokens) > 0      # partial output kept
+    assert rt.results[queued].status == STATUS_REJECTED
+    assert len(rt.results[queued].tokens) == 0   # zero compute spent
+    # the slot is free again and the runtime keeps serving
+    ok = rt.submit([4], max_new=2)
+    rt.drain()
+    assert rt.results[ok].status == STATUS_DONE
+
+
+def test_done_requests_honor_deadline(arch):
+    """No request completes past its deadline: generous deadlines all
+    finish in time, and every finish timestamp is within bound."""
+    clk = FakeClock()
+    rt = ServeRuntime(arch, SC, seed=0, clock=clk, sleep=clk.sleep)
+    rids = [rt.submit([i + 1], max_new=3, deadline_s=1e6) for i in range(6)]
+    while any(rt.results[r].status not in (STATUS_DONE,) for r in rids):
+        rt.step()
+        clk.advance(0.01)
+    for r in rids:
+        req = rt.results[r]
+        assert req.finished <= req.deadline
+
+
+def test_retry_backoff_schedule(arch):
+    """A dispatch that fails twice then succeeds: the injected sleeps
+    follow backoff_base * 2^attempt and the request still completes."""
+    clk = FakeClock()
+    fails = {"n": 0}
+
+    def hook(site, tick, attempt):
+        if site == "decode" and fails["n"] < 2:
+            fails["n"] += 1
+            raise RuntimeError("injected stall")
+
+    sc = ServeConfig(slots=2, max_prompt_len=4, max_new_tokens=3,
+                     prefill_batch=1, max_retries=3, backoff_base_s=0.5)
+    rt = ServeRuntime(arch, sc, seed=0, clock=clk, sleep=clk.sleep,
+                      fault_hook=hook)
+    rid = rt.submit([1, 2], max_new=3)
+    rt.drain()
+    assert rt.results[rid].status == STATUS_DONE
+    assert clk.sleeps == [0.5, 1.0]          # base * 2^0, base * 2^1
+    assert rt.dispatch_retries == 2
+    assert rt.results[rid].retries >= 2
+
+
+def test_decode_exhaustion_evicts_live_and_recovers(arch):
+    """Decode retry exhaustion evicts every live slot with its partial
+    output; the runtime immediately serves new requests."""
+    state = {"kill": True}
+
+    def hook(site, tick, attempt):
+        if site == "decode" and state["kill"]:
+            raise RuntimeError("persistent decode fault")
+
+    sc = ServeConfig(slots=2, max_prompt_len=4, max_new_tokens=3,
+                     prefill_batch=2, max_retries=1)
+    rt = ServeRuntime(arch, sc, seed=0, fault_hook=hook)
+    rids = [rt.submit([1 + i], max_new=3) for i in range(2)]
+    rt.step()
+    for r in rids:
+        req = rt.results[r]
+        assert req.status == STATUS_EVICTED_FAILURE
+        assert len(req.tokens) == 1          # the prefill's first token
+    assert rt.evictions["failure"] == 2
+    state["kill"] = False
+    ok = rt.submit([5], max_new=2)
+    rt.drain()
+    assert rt.results[ok].status == STATUS_DONE
+
+
+def test_prefill_exhaustion_evicts_chunk_only(arch):
+    def hook(site, tick, attempt):
+        if site == "prefill":
+            raise RuntimeError("persistent prefill fault")
+
+    sc = ServeConfig(slots=2, max_prompt_len=4, max_new_tokens=2,
+                     prefill_batch=2, max_retries=0)
+    rt = ServeRuntime(arch, sc, seed=0, fault_hook=hook)
+    rids = [rt.submit([1]), rt.submit([2])]
+    rt.step()
+    assert all(rt.results[r].status == STATUS_EVICTED_FAILURE
+               for r in rids)
+    assert rt.n_live == 0 and len(rt.free) == 2  # slots returned
+
+
+def test_closed_loop_loadgen(arch):
+    rt = ServeRuntime(arch, SC, seed=0)
+    prompts = make_prompts(8, SC.max_prompt_len, arch.vocab, seed=3)
+    row = run_closed_loop(rt, prompts, concurrency=3)
+    assert row["by_status"][STATUS_DONE] == 8
+    assert row["throughput_tok_s"] > 0
+    assert row["latency_s"]["p50"] is not None
+    assert row["latency_s"]["p50"] <= row["latency_s"]["p99"]
+
+
+def test_mamba2_runtime(arch):
+    m = mamba_smoke()
+    sc = ServeConfig(slots=2, max_prompt_len=4, max_new_tokens=3,
+                     prefill_batch=2)
+    rt = ServeRuntime(m, sc, seed=0)
+    rids = [rt.submit([1, 2], max_new=3), rt.submit([3], max_new=2)]
+    rt.drain()
+    assert all(rt.results[r].status == STATUS_DONE for r in rids)
+    assert rt.traces == {"prefill": 1, "admit": 1, "decode": 1}
+
+
+def test_serve_config_validation_and_roundtrip():
+    sc = ServeConfig(slots=16, deadline_s=2.5, max_retries=1)
+    assert ServeConfig.from_dict(sc.to_dict()) == sc
+    with pytest.raises(KeyError):
+        ServeConfig.from_dict({"bogus": 1})
+    with pytest.raises(ValueError):
+        ServeConfig(prefill_batch=9, slots=8).validate()
+    with pytest.raises(ValueError):
+        ServeConfig(deadline_s=0.0).validate()
+    cfg = ExperimentConfig(serve=sc)
+    rt = ExperimentConfig.from_dict(cfg.to_dict())
+    assert rt.serve == sc
+    # pre-serve configs load with default knobs
+    d = cfg.to_dict()
+    d.pop("serve")
+    assert ExperimentConfig.from_dict(d).serve == ServeConfig()
+
+
+def test_submit_rejects_over_budget(runtime):
+    with pytest.raises(ValueError):
+        runtime.submit(list(range(SC.max_prompt_len + 1)))
+    with pytest.raises(ValueError):
+        runtime.submit([1], max_new=SC.max_new_tokens + 1)
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices for the serve mesh")
+def test_mesh_placement_matches_host(arch):
+    from repro.launch.mesh import make_engine_mesh
+    sc = ServeConfig(slots=8, max_prompt_len=4, max_new_tokens=3,
+                     prefill_batch=4)
+    mesh = make_engine_mesh((4, 2), ("data", "model"))
+    rt = ServeRuntime(arch, sc, seed=0, mesh=mesh)
+    host = ServeRuntime(arch, sc, seed=0)
+    prompts = [[1 + i, 2, 3][: 1 + i % 3] for i in range(10)]
+    for r in (rt, host):
+        for p in prompts:
+            r.submit(p, max_new=3)
+        r.drain()
+    for a, b in zip(sorted(rt.results), sorted(host.results)):
+        assert rt.results[a].tokens.tolist() == \
+            host.results[b].tokens.tolist()
+    assert rt.traces == {"prefill": 1, "admit": 1, "decode": 1}
+    # the slot table actually carries the decode-state placement
+    spec = rt.state["kv"].k.sharding.spec
+    assert tuple(spec) == (None, "data", None, "model", None)
+
+
+# ---------------------------------------------------------------- legacy
+# launch/serve.py edge-case guards (the --steps 0 / --prompt-len 0 fixes)
+
+def test_legacy_serve_steps_zero(arch):
+    from repro.launch.serve import serve_decoder_only
+    res = serve_decoder_only(arch, batch=2, prompt_len=0, steps=0)
+    assert res["tokens"].shape == (2, 0)
+    assert res["decode_s_per_token"] == 0.0
+    res = serve_decoder_only(arch, batch=2, prompt_len=3, steps=0)
+    assert res["tokens"].shape == (2, 0)
+    with pytest.raises(ValueError):
+        serve_decoder_only(arch, batch=2, prompt_len=-1, steps=1)
+
+
+def test_legacy_serve_whisper_steps_zero():
+    from repro.configs.whisper_base import smoke as wsmoke
+    from repro.launch.serve import serve_whisper
+    res = serve_whisper(wsmoke(), batch=2, steps=0)
+    assert res["tokens"].shape == (2, 0)
+    assert res["decode_s_per_token"] == 0.0
