@@ -70,18 +70,33 @@ class ExperimentConfig:
     resume: bool = False
     # --- pipelined rounds ---
     # 0 = classic sequential rounds (one monolithic jitted round);
-    # 1 = software pipeline over two in-flight cohorts: ExtractFeatures
-    # compiles as its own dispatch so cohort k+1's extraction can overlap
-    # cohort k's ServerUpdate/FeatureGradients/Commit tail
+    # L >= 1 = software pipeline over L+1 in-flight cohorts: Extract-
+    # Features compiles as its own dispatch and the run loop keeps an
+    # L-deep ring of extracted stages, so cohorts k+1..k+L extract
+    # against bounded-stale snapshots while cohort k's ServerUpdate/
+    # FeatureGradients/Commit tail runs
     pipeline_depth: int = 0
     # 'sync'  — barrier mode: extract(k+1) waits for Commit(k); bit-for-
-    #           bit identical to the sequential Engine (the equivalence
-    #           goldens in tests/test_pipeline.py pin this)
-    # 'async' — latency-hiding mode: extract(k+1) is dispatched from the
-    #           pre-tail state while ServerUpdate(k) occupies the model
-    #           axes; client params and the θ_S^t snapshot are stale by
-    #           EXACTLY one round, never more
+    #           bit identical to the sequential Engine at ANY depth (the
+    #           equivalence goldens in tests/test_pipeline.py pin this;
+    #           the ring degenerates to one in-flight stage)
+    # 'async' — latency-hiding mode: extract(k+L) is dispatched from the
+    #           pre-tail state of round k while ServerUpdate(k) occupies
+    #           the model axes; client params and the θ_S^t snapshot are
+    #           stale by AT MOST pipeline_depth rounds, never more
     pipeline_staleness: str = "sync"
+    # --- staleness-weighted server updates (arxiv 2112.05929-style) ---
+    # 'none'    — stale cohorts contribute at full weight (default; the
+    #             pipelined tail keeps its exact pre-weighting trace)
+    # 'inverse' — scale each cohort's server gradients and feature
+    #             gradients by w = 1 / (1 + lag)
+    # 'exp'     — scale by w = exp(-staleness_lambda * lag)
+    # lag is the cohort's realized snapshot lag in rounds, passed into
+    # the compiled tail as a traced scalar (one trace across all lags);
+    # w(0) == 1.0 exactly, so sync schedules are a numerical no-op vs
+    # 'none' (allclose; the traced multiply may re-fuse reductions).
+    staleness_weighting: str = "none"
+    staleness_lambda: float = 0.5
     # --- client-population scenario (repro.scenario) ---
     # kind='none' (default) is the NULL scenario: no profile stream is
     # built and the Engine runs its scenario-free path bit-for-bit.
@@ -162,14 +177,21 @@ class ExperimentConfig:
         if self.sync_every < 1:
             raise ValueError(f"sync_every={self.sync_every}: the host "
                              "must sync at least every round (>= 1)")
-        if self.pipeline_depth not in (0, 1):
+        if self.pipeline_depth < 0:
             raise ValueError(
-                f"pipeline_depth={self.pipeline_depth}: only 0 (sequential) "
-                "and 1 (two in-flight cohorts) are supported")
+                f"pipeline_depth={self.pipeline_depth}: expected 0 "
+                "(sequential) or a positive staleness window L")
         if self.pipeline_staleness not in ("sync", "async"):
             raise ValueError(
                 f"pipeline_staleness={self.pipeline_staleness!r}: expected "
                 "'sync' or 'async'")
+        if self.staleness_weighting not in ("none", "inverse", "exp"):
+            raise ValueError(
+                f"staleness_weighting={self.staleness_weighting!r}: "
+                "expected 'none', 'inverse' or 'exp'")
+        if self.staleness_lambda < 0:
+            raise ValueError(
+                f"staleness_lambda={self.staleness_lambda} must be >= 0")
         self.scenario.validate()
         if self.scenario.churns and not self.pad_cohorts:
             # churn zeroes slots in the attendance mask; without padded
@@ -244,14 +266,22 @@ class ExperimentConfig:
                         help="resume from the latest checkpoint in "
                              "--ckpt-dir")
         ap.add_argument("--pipeline-depth", type=int, default=0,
-                        choices=(0, 1),
-                        help="1 = pipeline cohort k+1's feature extraction "
-                             "against cohort k's server inner loop")
+                        help="L >= 1 keeps an L-deep ring of in-flight "
+                             "cohort extractions overlapping the server "
+                             "inner loop (0 = sequential)")
         ap.add_argument("--pipeline-staleness", default="sync",
                         choices=("sync", "async"),
                         help="sync = barrier mode (bit-for-bit the "
-                             "sequential Engine); async = one-round-stale "
-                             "extraction overlapped with the server phase")
+                             "sequential Engine); async = bounded-stale "
+                             "extraction (lag <= depth) overlapped with "
+                             "the server phase")
+        ap.add_argument("--staleness-weighting", default="none",
+                        choices=("none", "inverse", "exp"),
+                        help="scale stale cohorts' server/feature "
+                             "gradients by realized lag: 1/(1+lag) or "
+                             "exp(-lambda*lag)")
+        ap.add_argument("--staleness-lambda", type=float, default=0.5,
+                        help="decay rate for --staleness-weighting exp")
         ScenarioConfig.add_arguments(ap)
         ResilienceConfig.add_arguments(ap)
         ServeConfig.add_arguments(ap)
@@ -276,6 +306,8 @@ class ExperimentConfig:
             resume=args.resume,
             pipeline_depth=args.pipeline_depth,
             pipeline_staleness=args.pipeline_staleness,
+            staleness_weighting=args.staleness_weighting,
+            staleness_lambda=args.staleness_lambda,
             scenario=ScenarioConfig.from_flags(args),
             resilience=ResilienceConfig.from_flags(args),
             serve=ServeConfig.from_flags(args),

@@ -24,13 +24,17 @@ bit the unsharded path (constraints pin layout, never values).
 ``cfg.resume`` restores the latest checkpoint under ``ckpt_dir`` and
 continues at the saved round with cadence and sampling stream aligned.
 
-Pipelined rounds: ``cfg.pipeline_depth=1`` runs a software pipeline
-over two in-flight cohorts — cohort k+1's ExtractFeatures dispatch
-(batch axes) against cohort k's ServerUpdate..Commit tail (model axes),
-with prefetched cohort sampling and a double-buffered
-:class:`~repro.api.phases.PipelineStage`.  ``pipeline_staleness='sync'``
-is bit-for-bit the sequential loop; ``'async'`` overlaps with exactly
-one round of client/θ_S^t staleness (see ARCHITECTURE.md "Pipelined
+Pipelined rounds: ``cfg.pipeline_depth=L`` runs a software pipeline
+over up to L+1 in-flight cohorts — cohorts k+1..k+L's ExtractFeatures
+dispatches (batch axes) against cohort k's ServerUpdate..Commit tail
+(model axes), with prefetched cohort sampling and an L-deep
+:class:`~repro.core.feature_store.StaleFeatureRing` of buffered
+:class:`~repro.api.phases.PipelineStage` stages.
+``pipeline_staleness='sync'`` is bit-for-bit the sequential loop at any
+depth (the ring degenerates to one barriered stage); ``'async'``
+overlaps with at most L rounds of client/θ_S^t staleness, and
+``cfg.staleness_weighting`` optionally scales each cohort's server and
+feature gradients by its realized lag (see ARCHITECTURE.md "Pipelined
 execution" and tests/test_pipeline.py).
 
 Pluggable callbacks observe the loop without forking it::
@@ -62,6 +66,7 @@ from repro.api.tasks import build_task
 from repro.checkpoint import (latest_step, load_checkpoint, load_metadata,
                               save_checkpoint)
 from repro.core.drift import GradStabilityTracker
+from repro.core.feature_store import StaleFeatureRing
 from repro.core.split import SplitTask
 from repro.data.federated import FederatedDataset, sample_cohort
 from repro.launch.mesh import make_engine_mesh
@@ -242,12 +247,12 @@ class Engine:
                                           # streams fold this in, resume
                                           # fast-forwards it)
         self._telemetry: list[dict] = []  # one row per sampled round
-        # the θ staleness the schedule can realize: async pipelining
-        # carries a snapshot exactly one round old; everything else
+        # the θ staleness the schedule can realize: async pipelining at
+        # depth L carries snapshots up to L rounds old; everything else
         # delivers fresh params (a straggler's *drawn* lag can exceed
         # this — its realized lag is capped by the schedule)
-        self._sched_lag = int(cfg.pipeline_depth > 0
-                              and cfg.pipeline_staleness == "async")
+        self._sched_lag = (cfg.pipeline_depth
+                           if cfg.pipeline_staleness == "async" else 0)
         churns = self.scenario is not None and self.scenario.churns
         if (cfg.pad_cohorts and (cfg.variable_attendance or churns)
                 and any(getattr(p, "mode", None) == "cycle"
@@ -289,7 +294,26 @@ class Engine:
                 donate_state=(cfg.pipeline_staleness == "sync"),
                 mesh=self.mesh, state_shardings=self.state_shardings,
                 shard_data=cfg.shard_cohort,
-                resilience=cfg.resilience)
+                resilience=cfg.resilience,
+                staleness_weighting=cfg.staleness_weighting,
+                staleness_lambda=cfg.staleness_lambda,
+                # deep rings buffer L stages across dispatch boundaries;
+                # pin their placement (depth 1 keeps the PR-4 lowering)
+                pin_stage=cfg.pipeline_depth > 1)
+        if self.pipeline is None:
+            # fused sequential programs fall back to monolithic rounds:
+            # the schedule delivers fresh params whatever depth says
+            self._sched_lag = 0
+
+    @property
+    def ring_depth(self) -> int:
+        """In-flight extract stages the run loop keeps: the bounded
+        staleness window L in async mode, one barriered stage in sync
+        mode (any configured depth — sync extract(k+1) waits for
+        Commit(k), so a deeper ring could never fill), 0 unpipelined."""
+        if self.pipeline is None:
+            return 0
+        return self._sched_lag if self._sched_lag else 1
 
     # ------------------------------------------------------------ state
     def init_state(self) -> TrainState:
@@ -503,11 +527,12 @@ class Engine:
                 self.recovery.restore_state(meta)
                 if "ema" in meta:
                     self._ema = jnp.asarray(meta["ema"], jnp.float32)
-            # pipelined runs draw round r's cohort one loop iteration
-            # early (before round r-1's recovery), so their draws trail
-            # the ledger by one extra round — including the post-replay
-            # priming draw for round `step` itself
-            self._ledger_offset = 1 if self.pipeline is not None else 0
+            # pipelined runs draw round r's cohort ring_depth loop
+            # iterations early (before rounds r-L..r-1's recovery), so
+            # their draws trail the ledger by ring_depth rounds —
+            # including the post-replay priming draws for rounds
+            # `step..step+L-1` themselves
+            self._ledger_offset = self.ring_depth
             self._ledger_cutoff = step + self._ledger_offset
         self._replay_sampling(rng, step)
         self.log(f"[{self.algo.name}] resumed from {cfg.ckpt_dir} at "
@@ -522,17 +547,26 @@ class Engine:
             return self.pipeline.extract(state, cohort, xs, ys)
         return self.pipeline.extract(state, cohort, xs, ys, mask)
 
-    def _tail(self, state, inputs, stage, key):
+    def _tail(self, state, inputs, stage, key, lag: int = 0):
         """Dispatch the ServerUpdate..Commit tail consuming ``stage``."""
         cohort, xs, ys, mask = inputs
+        kw = {}
+        if self.cfg.staleness_weighting != "none":
+            # the realized lag rides in as a TRACED f32 scalar so one
+            # tail trace serves every lag the ring can deliver; with
+            # weighting 'none' the call keeps its exact historical
+            # signature (bit-for-bit the pre-weighting trace)
+            kw["lag"] = jnp.float32(lag)
         if self.cfg.resilience.guard:
             # guard-on rounds ALWAYS thread the EMA carry, so the tail
             # compiles once with the health phase folded in
             return self.pipeline.tail(state, cohort, xs, ys, key, stage,
-                                      mask, self._ema)
+                                      mask, self._ema, **kw)
         if mask is None:
-            return self.pipeline.tail(state, cohort, xs, ys, key, stage)
-        return self.pipeline.tail(state, cohort, xs, ys, key, stage, mask)
+            return self.pipeline.tail(state, cohort, xs, ys, key, stage,
+                                      **kw)
+        return self.pipeline.tail(state, cohort, xs, ys, key, stage, mask,
+                                  **kw)
 
     def _round_call(self, state, inputs, key):
         """Dispatch the monolithic round (guard-off calls keep the exact
@@ -577,7 +611,7 @@ class Engine:
         return None
 
     def _recover_round(self, state, inputs, inj0, rnd: int, stage=None,
-                       pipelined: bool = False):
+                       pipelined: bool = False, lag: int = 0):
         """Drive round ``rnd`` to an accepted ``(state, metrics)`` under
         the recovery policy.
 
@@ -606,10 +640,13 @@ class Engine:
                 if self.faults is not None:
                     self.faults.check_dispatch(rnd, attempt, site)
                 if pipelined:
-                    st = (cur_stage if cur_stage is not None
-                          else self._extract(cur_state, cur_inj))
+                    # a re-extract reads the CURRENT candidate state, so
+                    # its realized lag (and staleness weight) resets to 0
+                    st, att_lag = cur_stage, lag
+                    if st is None:
+                        st, att_lag = self._extract(cur_state, cur_inj), 0
                     new_state, metrics = self._tail(cur_state, cur_inj,
-                                                    st, key)
+                                                    st, key, lag=att_lag)
                 else:
                     new_state, metrics = self._round_call(cur_state,
                                                           cur_inj, key)
@@ -712,64 +749,83 @@ class Engine:
         # health verdict every round by design, so it pins sync_k to 1.
         sync_k = 1 if cfg.resilience.guard else max(1, cfg.sync_every)
         t_mark, r_mark = t0, start_round
-        # ---- pipeline prime: sample cohort ``start_round`` and put its
-        # extraction in flight (async dispatch — does not block the host).
-        # On resume the restored state re-primes the pipeline, so the
-        # first post-resume extract is fresh (lag 0), exactly like the
-        # uninterrupted run's warm-up round.
+        # ---- pipeline prime: sample the first ``ring_depth`` cohorts IN
+        # ROUND ORDER (the rng/cohort stream stays bit-for-bit the
+        # sequential one) and put their extractions in flight from the
+        # initial state (async dispatches — they do not block the host).
+        # Consumed at lags 0..L-1, under the L bound by construction.
+        # On resume the restored state re-primes the ring, so every
+        # post-resume stage reads the restored (fresh) params, exactly
+        # like the uninterrupted run's warm-up rounds.
         pipelined = self.pipeline is not None
+        ring_depth = self.ring_depth
         t_tel = len(self._telemetry)     # rows this run will append start here
-        stage, stage_src, inputs, inj_inputs, max_lag = \
-            None, start_round, None, None, 0
+        ring = StaleFeatureRing(ring_depth) if pipelined else None
+        max_lag, cur_lag = 0, 0
         nxt_inputs = None                # non-pipelined double buffer
-        if pipelined and start_round < cfg.rounds:
-            inputs = self.sample_round(rng)
-            # attempt-0 fault injection happens BEFORE the priming
-            # extract so a poisoned delivery flows into the stage's
-            # features (no-op without a fault stream)
-            inj_inputs = self._inject_nan(inputs, start_round, 0)
-            stage = self._extract(state, inj_inputs)
+        if pipelined:
+            for i in range(min(ring_depth, cfg.rounds - start_round)):
+                p_inputs = self.sample_round(rng)
+                # attempt-0 fault injection happens BEFORE the priming
+                # extract so a poisoned delivery flows into the stage's
+                # features (no-op without a fault stream)
+                p_inj = self._inject_nan(p_inputs, start_round + i, 0)
+                ring.push(start_round + i, start_round,
+                          self._extract(state, p_inj), p_inputs, p_inj)
         for rnd in range(start_round, cfg.rounds):
             attempts, healthy = 0, True
             if pipelined:
-                # prefetch cohort k+1's sampling while round k's compute
+                # host-side bookkeeping only: round k's stage leaves the
+                # ring before the k+L slot is pushed, so at most L stages
+                # are ever buffered and every consumed lag is <= L
+                entry = ring.pop(rnd)
+                inputs, inj_inputs = entry.inputs, entry.inj_inputs
+                cur_lag = rnd - entry.src_round
+                max_lag = max(max_lag, cur_lag)
+                # prefetch cohort k+L's sampling while round k's compute
                 # is (or is about to be) on the devices
                 with sec("sample"):
                     nxt_inputs = (self.sample_round(rng)
-                                  if rnd + 1 < cfg.rounds else None)
-                nxt_inj = (self._inject_nan(nxt_inputs, rnd + 1, 0)
+                                  if rnd + ring_depth < cfg.rounds else None)
+                nxt_inj = (self._inject_nan(nxt_inputs, rnd + ring_depth, 0)
                            if nxt_inputs is not None else None)
                 t_round = time.time()
-                nxt = None
                 if nxt_inputs is not None \
                         and cfg.pipeline_staleness == "async":
-                    # overlap: extract(k+1) from the PRE-tail state — it
+                    # overlap: extract(k+L) from the PRE-tail state — it
                     # shares no dependency with tail(k)'s outputs, so XLA
                     # can run it on the batch axes while the server inner
                     # loop occupies the model axes.  Clients and the
-                    # θ_S^t snapshot are stale by exactly one round.
-                    nxt = (self._extract(state, nxt_inj), rnd)
-                max_lag = max(max_lag, rnd - stage_src)
+                    # θ_S^t snapshot are stale by exactly L rounds once
+                    # the ring is warm (less during warm-up and rewinds).
+                    ring.push(rnd + ring_depth, rnd,
+                              self._extract(state, nxt_inj),
+                              nxt_inputs, nxt_inj)
                 if self.recovery is None:
                     with sec("dispatch"):
-                        state, metrics = self._tail(state, inj_inputs, stage,
-                                                    self.round_key(rnd))
+                        state, metrics = self._tail(state, inj_inputs,
+                                                    entry.stage,
+                                                    self.round_key(rnd),
+                                                    lag=cur_lag)
                 else:
                     state, metrics, attempts, healthy = self._recover_round(
-                        state, inputs, inj_inputs, rnd, stage=stage,
-                        pipelined=True)
-                    if attempts and nxt is not None:
-                        # the async prefetch read a pre-round state that
-                        # recovery discarded — re-extract from the
-                        # accepted state (sync semantics for this round)
-                        nxt = (self._extract(state, nxt_inj), rnd + 1)
-                if nxt_inputs is not None and nxt is None:
+                        state, inputs, inj_inputs, rnd, stage=entry.stage,
+                        pipelined=True, lag=cur_lag)
+                    if attempts and len(ring):
+                        # every in-flight prefetch read a pre-round state
+                        # that recovery discarded — re-extract the whole
+                        # ring from the accepted state, deterministically
+                        # rewinding the schedule (the rewound stages are
+                        # fresh: their lags restart from 0)
+                        ring.rewind(lambda inj: self._extract(state, inj),
+                                    src_round=rnd + 1)
+                if nxt_inputs is not None \
+                        and cfg.pipeline_staleness != "async":
                     # sync barrier: extract(k+1) reads the post-Commit
                     # state — bit-for-bit the sequential schedule
-                    nxt = (self._extract(state, nxt_inj), rnd + 1)
-                if nxt is not None:
-                    (stage, stage_src), inputs, inj_inputs = \
-                        nxt, nxt_inputs, nxt_inj
+                    ring.push(rnd + 1, rnd + 1,
+                              self._extract(state, nxt_inj),
+                              nxt_inputs, nxt_inj)
             else:
                 with sec("sample"):
                     # double buffer: round k-1 already sampled, padded,
@@ -806,7 +862,7 @@ class Engine:
             ti = t_tel + (rnd - start_round)
             if ti < len(self._telemetry):
                 self._telemetry[ti]["realized_lag"] = (
-                    rnd - stage_src if pipelined else 0)
+                    cur_lag if pipelined else 0)
             if cfg.collect_timing:
                 if sync_k == 1:
                     with sec("sync"):
@@ -889,7 +945,12 @@ class Engine:
             self.pipeline_stats = {
                 "active": pipelined if cfg.rounds > start_round else False,
                 "mode": cfg.pipeline_staleness,
+                "depth": cfg.pipeline_depth,
+                "ring_depth": ring_depth,
+                "staleness_weighting": cfg.staleness_weighting,
                 "max_theta_s_lag_rounds": max_lag if pipelined else 0,
+                "realized_lags": (list(ring.realized_lags)
+                                  if ring is not None else []),
                 "extract_traces": (self.pipeline.extract_traces
                                    if pipelined else 0),
                 "tail_traces": (self.pipeline.tail_traces

@@ -126,6 +126,9 @@ class RoundVars:
     store: Any = None                 # prebuilt pooled D_S^f (pipelined
                                       # extract handoff); None = pool inline
     fgrads: Any = None                # [C, b, ...] feature gradients
+    stale_w: Any = None               # traced staleness weight w(lag)
+                                      # (None = unweighted; w scales the
+                                      # server + feature gradients)
     metrics: dict = field(default_factory=dict)
 
 
@@ -232,10 +235,12 @@ class ServerUpdate(Phase):
             server, sloss = server_inner_loop(
                 ctx.task, v.state.server, ctx.opt_server, store, v.key,
                 ctx.cycle, batch=jax.tree.leaves(v.ys)[0].shape[1],
-                mesh=ctx.mesh)
+                mesh=ctx.mesh, grad_scale=v.stale_w)
             v.metrics["server_loss"] = sloss
         elif self.mode == "replica_avg":
             losses, gs = _pair_server_losses_and_grads(ctx, v)
+            if v.stale_w is not None:
+                gs = jax.tree.map(lambda g: g * v.stale_w, gs)
             rep = broadcast_entity(v.state.server, v.ys.shape[0])
             if ctx.mesh is not None:
                 rep = constrain_cohort_tree(rep, ctx.mesh)
@@ -253,6 +258,8 @@ class ServerUpdate(Phase):
             else:
                 gmean = jax.tree.map(
                     lambda g: masked_axis0_mean(g, v.mask), gs)
+            if v.stale_w is not None:
+                gmean = jax.tree.map(lambda g: g * v.stale_w, gmean)
             server = entity_step(v.state.server, gmean, ctx.opt_server)
             v.metrics["server_loss"] = masked_mean(losses, v.mask)
         else:
@@ -279,9 +286,11 @@ class FeatureGradients(Phase):
                else self.average)
         ccfg = (ctx.cycle if avg == ctx.cycle.avg_client_grads
                 else replace(ctx.cycle, avg_client_grads=avg))
-        v.fgrads = constrain_cohort(
-            feature_gradients(ctx.task, params, v.feats, v.ys, ccfg,
-                              mask=v.mask, mesh=ctx.mesh), ctx.mesh)
+        fg = feature_gradients(ctx.task, params, v.feats, v.ys, ccfg,
+                               mask=v.mask, mesh=ctx.mesh)
+        if v.stale_w is not None:
+            fg = fg * v.stale_w.astype(fg.dtype)
+        v.fgrads = constrain_cohort(fg, ctx.mesh)
         v.metrics.update(feat_grad_metrics(v.fgrads, mask=v.mask))
 
 
@@ -671,7 +680,10 @@ def build_pipelined_algorithm(program: RoundProgram, task: SplitTask,
                               mesh: Any = None,
                               state_shardings: Any = None,
                               shard_data: bool = True,
-                              resilience: Any = None
+                              resilience: Any = None,
+                              staleness_weighting: str = "none",
+                              staleness_lambda: float = 0.5,
+                              pin_stage: bool = False
                               ) -> Optional[PipelinedAlgorithm]:
     """Compile a RoundProgram into the (extract, tail) dispatch pair.
 
@@ -686,6 +698,16 @@ def build_pipelined_algorithm(program: RoundProgram, task: SplitTask,
     with the round); ``donate_state`` additionally donates the TrainState
     — the Engine switches it off in async mode, where the pre-tail state
     is still in flight inside the next cohort's extract dispatch.
+
+    ``staleness_weighting`` != 'none' gives the tail an extra traced
+    ``lag`` scalar and scales the cohort's server + feature gradients by
+    w(lag) (``1/(1+lag)`` or ``exp(-staleness_lambda*lag)``) — one tail
+    trace across every realized lag, and 'none' keeps the exact
+    pre-weighting signature so depth-1 goldens stay bit-for-bit.
+    ``pin_stage`` (deep rings, L > 1) runs the extracted stage through
+    :func:`repro.sharding.specs.constrain_stage` so every buffered
+    stage holds one stable placement regardless of how many are in
+    flight; off by default to leave the depth-1 lowering untouched.
     """
     split = split_program(program)
     if split is None:
@@ -724,10 +746,21 @@ def build_pipelined_algorithm(program: RoundProgram, task: SplitTask,
         # (see PipelineStage); per-client programs the gathered stack
         clients = (state.client_global if program.uses_global_client
                    else v.cohort_clients)
-        return PipelineStage(clients, server_prev, feats, store)
+        stage = PipelineStage(clients, server_prev, feats, store)
+        if pin_stage and ctx.mesh is not None:
+            from repro.sharding.specs import constrain_stage
+            stage = constrain_stage(stage, ctx.mesh,
+                                    program.uses_global_client)
+        return stage
 
-    def tail_impl(state, cohort, xs, ys, key, stage, mask=None, ema=None):
+    def tail_impl(state, cohort, xs, ys, key, stage, mask=None, ema=None,
+                  lag=None):
         traces["tail"] += 1           # executes at trace time only
+        stale_w = None
+        if staleness_weighting != "none":
+            l = jnp.asarray(0.0 if lag is None else lag, jnp.float32)
+            stale_w = (1.0 / (1.0 + l) if staleness_weighting == "inverse"
+                       else jnp.exp(-staleness_lambda * l))
         cohort_clients = stage.clients
         if program.uses_global_client:
             # re-broadcast the snapshot INSIDE the trace so XLA keeps it
@@ -745,11 +778,13 @@ def build_pipelined_algorithm(program: RoundProgram, task: SplitTask,
         v = RoundVars(state=state, cohort=cohort, xs=xs, ys=ys, key=key,
                       mask=mask, ema=ema, cohort_clients=cohort_clients,
                       server_prev=stage.server_prev, feats=feats,
-                      store=stage.store)
+                      store=stage.store, stale_w=stale_w)
         for phase in tail_phases:
             phase(ctx, v)
         if guard is not None:
             guard(ctx, v)
+        if stale_w is not None:
+            v.metrics["stale_weight"] = stale_w
         return v.state, v.metrics
 
     tail_kwargs = {}

@@ -83,7 +83,8 @@ class CycleConfig:
 
 def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
                       store: FeatureStore, key, ccfg: CycleConfig,
-                      batch: int, mesh=None) -> tuple[EntityState, jnp.ndarray]:
+                      batch: int, mesh=None,
+                      grad_scale=None) -> tuple[EntityState, jnp.ndarray]:
     """E epochs of minibatch training on the resampled feature dataset.
 
     When the store carries a row-validity mask (padded cohort), the plan
@@ -105,7 +106,9 @@ def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
     ``ccfg.fused_gather_loss`` additionally fuses gather and head loss
     through ``kernels.ops.fused_gather_loss_mean`` when the task
     exposes a linear server head.  ``mesh=None`` leaves placement to
-    GSPMD — layout only, never values.
+    GSPMD — layout only, never values.  ``grad_scale`` (a traced scalar,
+    or None) multiplies every clipped gradient before the optimizer
+    step — the staleness-weighting hook; 1.0 is an exact no-op.
     """
     sb = min(ccfg.server_batch or batch, store.size)
     shard_local = ccfg.shard_local_resample and mesh is not None
@@ -169,6 +172,10 @@ def server_inner_loop(task: SplitTask, server: EntityState, opt_s: Optimizer,
             loss, grads = jax.value_and_grad(task.server_loss)(entity.params,
                                                                f, y)
         grads = _maybe_clip(grads, ccfg.grad_clip)
+        if grad_scale is not None:
+            # staleness weighting: a traced scalar so one trace serves
+            # every realized lag; scale == 1.0 is an exact no-op
+            grads = jax.tree.map(lambda g: g * grad_scale, grads)
         return entity_step(entity, grads, opt_s), loss
 
     if step_ok is None:

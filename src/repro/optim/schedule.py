@@ -9,10 +9,19 @@ def constant(lr: float):
 
 
 def cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    if warmup < 0:
+        raise ValueError(f"cosine schedule: warmup={warmup} must be >= 0")
+    if total <= warmup:
+        # max(1, total - warmup) would silently collapse the decay
+        # window to a single step (lr cliffs from lr to final_frac*lr
+        # between steps `warmup` and `warmup+1`) — reject upfront
+        raise ValueError(f"cosine schedule: total={total} must exceed "
+                         f"warmup={warmup} (no decay window otherwise)")
+
     def f(step):
         s = jnp.asarray(step, jnp.float32)
         warm = lr * jnp.minimum(1.0, s / jnp.maximum(1, warmup))
-        prog = jnp.clip((s - warmup) / jnp.maximum(1, total - warmup), 0, 1)
+        prog = jnp.clip((s - warmup) / (total - warmup), 0, 1)
         cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
         return jnp.where(s < warmup, warm, lr * cos)
     return f

@@ -50,6 +50,8 @@ def build_engine(args):
         n_clients=args.clients, attendance=args.attendance,
         min_cohort=2, batch=args.batch, eval_every=1,
         width=8, cut=1, seed=args.seed,
+        pipeline_depth=args.pipeline_depth,
+        pipeline_staleness=args.pipeline_staleness,
         ckpt_dir=args.ckpt_dir, resume=args.resume,
         resilience=ResilienceConfig(
             guard=args.guard,
@@ -74,6 +76,11 @@ def main(argv=None) -> int:
                     help="arm the in-trace health guards")
     ap.add_argument("--faults", default="",
                     help="fault-injection spec (see repro.resilience.faults)")
+    ap.add_argument("--pipeline-depth", type=int, default=0,
+                    help="run the pipelined (extract, tail) schedule "
+                         "with an L-deep staleness ring")
+    ap.add_argument("--pipeline-staleness", default="sync",
+                    choices=("sync", "async"))
     ap.add_argument("--sleep-per-round", type=float, default=0.0,
                     help="host sleep after each round (widens the "
                          "SIGKILL window for the crash test)")

@@ -45,11 +45,16 @@ def run_closed_loop(rt: ServeRuntime, prompts: list[np.ndarray], *,
     pending = list(prompts)[::-1]           # submit in order via pop()
     t0 = rt.clock()
     outstanding: set[int] = set()
+    submitted: list[int] = []               # THIS call's request ids — the
+    #                                         runtime's results dict is
+    #                                         shared across calls on a
+    #                                         reused runtime
     ticks = 0
     while pending or outstanding:
         while pending and len(outstanding) < concurrency:
-            outstanding.add(rt.submit(pending.pop(),
-                                      deadline_s=deadline_s))
+            rid = rt.submit(pending.pop(), deadline_s=deadline_s)
+            submitted.append(rid)
+            outstanding.add(rid)
         rt.step()
         outstanding = {rid for rid in outstanding
                        if rt.results[rid].status not in TERMINAL}
@@ -59,7 +64,7 @@ def run_closed_loop(rt: ServeRuntime, prompts: list[np.ndarray], *,
                                f"ticks ({len(pending)} pending, "
                                f"{len(outstanding)} outstanding)")
     elapsed = max(rt.clock() - t0, 1e-9)
-    reqs = [rt.results[rid] for rid in sorted(rt.results)][-len(prompts):]
+    reqs = [rt.results[rid] for rid in submitted]
     done = [r for r in reqs if r.status == STATUS_DONE]
     toks = sum(len(r.tokens) for r in done)
     return {

@@ -454,3 +454,35 @@ def train_state_shardings(state, mesh: Mesh, moe_shard_mode: str = "expert",
         _field(state.server, "server"),
         _field(state.clients, "client" if shard_cohort else "full"),
         _field(state.client_global, "full"))
+
+
+def constrain_stage(stage, mesh: Optional[Mesh], uses_global_client: bool):
+    """Pin every field of a pipelined :class:`PipelineStage` to its
+    canonical placement — the buffer-placement rule for the depth-L
+    staleness ring.
+
+    At depth 1 the single in-flight stage inherits a stable layout from
+    the constraints inside the extract trace, but with L stages buffered
+    the compiler is free to place each ring slot differently (the stage
+    outlives several dispatch boundaries).  Constraining at the stage
+    boundary keeps all L slots on ONE layout: cohort-stacked tensors
+    (per-client entity stacks, smashed data, the pooled store rows) on
+    the batch axes, the θ_S^t snapshot — and the un-broadcast global θ_C
+    snapshot — on the FSDP/TP weight axes.  Value-neutral (layout only);
+    no-op off-mesh.
+    """
+    if mesh is None:
+        return stage
+    clients = (constrain_entity_params(stage.clients, mesh, role="full")
+               if uses_global_client
+               else constrain_cohort_tree(stage.clients, mesh))
+    store = stage.store
+    if store is not None:
+        from repro.core.feature_store import constrain_store
+        store = constrain_store(store, mesh)
+    return stage._replace(
+        clients=clients,
+        server_prev=constrain_entity_params(stage.server_prev, mesh),
+        feats=(None if stage.feats is None
+               else constrain_cohort_tree(stage.feats, mesh)),
+        store=store)

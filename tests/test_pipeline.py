@@ -1,23 +1,34 @@
 """Pipelined rounds: the equivalence suite that locks the scheduler down.
 
-The tentpole contract (ISSUE 4): restructuring RoundProgram execution
-into a software pipeline over two in-flight cohorts must not change a
-single bit where the schedules are required to agree:
+The tentpole contract (ISSUE 4, generalized to depth L by ISSUE 10):
+restructuring RoundProgram execution into a software pipeline over an
+L-deep ring of in-flight cohorts must not change a single bit where the
+schedules are required to agree:
 
-1. **Sync barrier == sequential, bit-for-bit.**  ``pipeline_depth=1``
-   with ``pipeline_staleness='sync'`` reproduces the sequential Engine
+1. **Sync barrier == sequential, bit-for-bit — at ANY depth.**
+   ``pipeline_staleness='sync'`` reproduces the sequential Engine
    exactly — per-round TrainState and metrics — for ALL 10 registered
    algorithms (fused programs fall back to the monolithic round and are
-   trivially covered; the split programs are the real test).
+   trivially covered; the split programs are the real test); the ring
+   degenerates to one barriered stage whatever ``pipeline_depth`` says.
 2. **Trace budget.**  One extract trace + one tail trace per (algo,
-   config, mesh) across varying live cohort sizes — the sequential
-   budget (one round trace) plus at most one pipeline warm-up trace.
-3. **Bounded staleness.**  Async mode's θ_S/client lag is EXACTLY one
-   round, never more: the Engine's schedule is pinned against a manual
-   re-execution of the one-round-stale recurrence.
-4. **Resume.**  A resumed ``pipeline_depth=1`` run is bit-for-bit the
-   uninterrupted pipelined run (the pipeline re-primes from the
-   restored state).
+   config, mesh) across varying live cohort sizes AND any ring depth —
+   the sequential budget (one round trace) plus at most one pipeline
+   warm-up trace.
+3. **Bounded staleness.**  Async mode's θ_S/client lag never exceeds
+   ``pipeline_depth``: the Engine's schedule is pinned against manual
+   re-executions of the stale recurrence at depth 1 and depth 2
+   (prime lags 0..L-1, steady-state lag exactly L).
+4. **Resume.**  A resumed sync pipelined run is bit-for-bit the
+   uninterrupted pipelined run at any depth; async resume re-primes
+   the ring from the restored state and keeps the lag bound.
+5. **Staleness weighting.**  ``staleness_weighting != 'none'`` scales
+   each cohort's server/feature gradients by w(realized lag) inside
+   the one compiled tail; w(0) == 1.0 exactly, so sync schedules are a
+   numerical no-op vs unweighted (allclose — the traced multiply may
+   re-fuse downstream reductions, shifting them by an ulp) while async
+   runs genuinely
+   change; ``'none'`` keeps the tail's historical signature bit-for-bit.
 """
 import json
 from dataclasses import replace
@@ -89,6 +100,21 @@ def test_pipelined_sync_engine_is_bit_for_bit_sequential(name):
         f"{name}: fused programs must fall back to the monolithic round")
 
 
+@pytest.mark.parametrize("depth", [2, 4])
+@pytest.mark.parametrize("name", ["cyclesfl", "psl"])
+def test_deep_sync_pipeline_is_bit_for_bit_sequential(name, depth):
+    """Depth-L generalization of the sync golden: whatever the
+    configured depth, the sync barrier means extract(k+1) waits for
+    Commit(k) — the ring degenerates to one in-flight stage and the run
+    is bit-for-bit the sequential Engine."""
+    r_seq, _ = _run(_cfg(name))
+    r_pipe, res = _run(_cfg(name, pipeline_depth=depth))
+    _assert_equal(r_seq.state, r_seq.rows, r_pipe.state, r_pipe.rows,
+                  f"{name} depth={depth}")
+    assert res["pipeline"]["ring_depth"] == 1
+    assert res["pipeline"]["max_theta_s_lag_rounds"] == 0
+
+
 @pytest.mark.parametrize("name", sorted(n for n in PROGRAMS
                                         if split_program(get_program(n))))
 def test_split_round_matches_monolithic_bit_for_bit(name, setup):
@@ -142,6 +168,21 @@ def test_pipelined_trace_budget_across_varying_cohorts(name):
         f"{name}: the monolithic round must not trace on the pipelined path")
 
 
+def test_deep_ring_trace_budget_across_varying_cohorts():
+    """The compile contract survives depth L: a depth-4 async ring over
+    varying live cohorts (and with staleness weighting active, whose lag
+    rides in as a traced scalar) still traces ONE extract and ONE tail."""
+    cfg = _cfg("cyclesfl", rounds=8, n_clients=24, attendance=0.25,
+               variable_attendance=True, pipeline_depth=4,
+               pipeline_staleness="async", staleness_weighting="exp")
+    eng = Engine(cfg, log=lambda *a, **k: None)
+    res = eng.run()
+    assert eng.pipeline.extract_traces == 1
+    assert eng.pipeline.tail_traces == 1
+    assert eng.algo.trace_count == 0
+    assert res["pipeline"]["max_theta_s_lag_rounds"] <= 4
+
+
 # ------------------------------------------------------------- staleness
 def test_async_theta_s_lag_never_exceeds_one_round():
     """The staleness contract: in async mode every consumed stage was
@@ -154,6 +195,22 @@ def test_async_theta_s_lag_never_exceeds_one_round():
     # sync barrier mode has no staleness at all
     _, res = _run(_cfg("cyclesfl", pipeline_depth=1))
     assert res["pipeline"]["max_theta_s_lag_rounds"] == 0
+
+
+@pytest.mark.parametrize("depth,rounds", [(2, 6), (3, 6)])
+def test_async_lag_bounded_by_depth(depth, rounds):
+    """Depth-L bound: per-cohort realized lags warm up 0..L-1 (prime
+    extracts read the initial state) then hold at exactly L — never
+    more.  Pinned against the exact expected lag sequence."""
+    _, res = _run(_cfg("cyclesfl", rounds=rounds, pipeline_depth=depth,
+                       pipeline_staleness="async"))
+    lags = res["pipeline"]["realized_lags"]
+    want = [min(r, depth) for r in range(rounds)]
+    assert lags == want, (lags, want)
+    assert res["pipeline"]["max_theta_s_lag_rounds"] == depth
+    # per-round telemetry carries the same realized lags
+    tel = [r["realized_lag"] for r in res["telemetry"]["per_round"]]
+    assert tel == want
 
 
 def test_async_engine_matches_manual_one_round_stale_schedule():
@@ -180,6 +237,39 @@ def test_async_engine_matches_manual_one_round_stale_schedule():
         rows.append({k: np.asarray(v) for k, v in metrics.items()})
         stage, inputs = nxt, nxt_inputs
     _assert_equal(r_async.state, r_async.rows, state, rows, "async schedule")
+
+
+def test_async_engine_matches_manual_depth2_stale_schedule():
+    """The depth-L schedule golden: re-execute the depth-2 bounded-stale
+    recurrence by hand — the first L stages extracted from the initial
+    state (lags 0..L-1 at consumption), then stage(k+L) extracted from
+    the PRE-tail state of round k (steady-state lag exactly L) — and
+    require the Engine's depth-2 async run to match bit-for-bit.  (If
+    the Engine ever consumed a stage older than L rounds, a fresher one,
+    or drew cohorts out of round order, this diverges.)"""
+    L = 2
+    cfg = _cfg("cyclesfl", rounds=5, pipeline_depth=L,
+               pipeline_staleness="async")
+    r_async, _ = _run(cfg)
+
+    eng = Engine(cfg, log=lambda *a, **k: None)
+    state = eng.init_state()
+    rng = np.random.default_rng(cfg.seed + 1)
+    ring = []
+    for _ in range(min(L, cfg.rounds)):            # prime from init state
+        ins = eng.sample_round(rng)
+        ring.append((eng._extract(state, ins), ins))
+    rows = []
+    for rnd in range(cfg.rounds):
+        stage, inputs = ring.pop(0)
+        if rnd + L < cfg.rounds:
+            nxt_inputs = eng.sample_round(rng)     # round order: rnd + L
+            # pre-tail state of round rnd: consumed at rnd + L -> lag L
+            ring.append((eng._extract(state, nxt_inputs), nxt_inputs))
+        state, metrics = eng._tail(state, inputs, stage, eng.round_key(rnd))
+        rows.append({k: np.asarray(v) for k, v in metrics.items()})
+    _assert_equal(r_async.state, r_async.rows, state, rows,
+                  "depth-2 async schedule")
 
 
 def test_async_equals_sync_when_staleness_cannot_bind(setup):
@@ -258,16 +348,41 @@ def test_pipelined_resume_matches_uninterrupted_pipelined_run(tmp_path):
         assert got["test_loss"] == want["test_loss"]
 
 
-def test_async_resume_reprimes_and_stays_bounded(tmp_path):
-    """Async resume re-primes the pipeline from the restored state (the
-    first post-resume extract is fresh, like the warm-up round); the lag
-    bound still holds and the run completes."""
-    base = _cfg("cyclesfl", rounds=6, eval_every=2, pipeline_depth=1,
+def test_deep_sync_resume_matches_uninterrupted_pipelined_run(tmp_path):
+    """Depth-2 resume golden: a resumed ``pipeline_depth=2`` sync run is
+    bit-for-bit the uninterrupted pipelined run (which is itself the
+    sequential run) — the re-primed ring reads the restored state."""
+    base = _cfg("cyclesfl", rounds=6, eval_every=2, pipeline_depth=2)
+    ra = Rec()
+    full = Engine(replace(base, ckpt_dir=str(tmp_path / "a")),
+                  callbacks=(ra,), log=lambda *a, **k: None).run()
+    dir_b = str(tmp_path / "b")
+    Engine(replace(base, rounds=4, ckpt_dir=dir_b),
+           log=lambda *a, **k: None).run()
+    rb = Rec()
+    resumed = Engine(replace(base, ckpt_dir=dir_b, resume=True),
+                     callbacks=(rb,), log=lambda *a, **k: None).run()
+    assert resumed["resumed_from_round"] == 4
+    for la, lb in zip(jax.tree.leaves(ra.state), jax.tree.leaves(rb.state)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    tail = [h for h in full["history"] if h["round"] > 4]
+    for got, want in zip(resumed["history"], tail):
+        assert got["test_loss"] == want["test_loss"]
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_async_resume_reprimes_and_stays_bounded(depth, tmp_path):
+    """Async resume re-primes the ring from the restored state (the
+    post-resume prime extracts are fresh, like the warm-up rounds); the
+    lag bound still holds and the run completes."""
+    base = _cfg("cyclesfl", rounds=6, eval_every=2, pipeline_depth=depth,
                 pipeline_staleness="async", ckpt_dir=str(tmp_path / "c"))
     Engine(replace(base, rounds=4), log=lambda *a, **k: None).run()
     res = Engine(replace(base, resume=True), log=lambda *a, **k: None).run()
     assert res["resumed_from_round"] == 4
-    assert res["pipeline"]["max_theta_s_lag_rounds"] <= 1
+    assert res["pipeline"]["max_theta_s_lag_rounds"] <= depth
+    # re-primed lags restart at 0 against the restored state
+    assert res["pipeline"]["realized_lags"][:depth] == list(range(depth))
 
 
 # ------------------------------------------------------------------ mesh
@@ -360,26 +475,89 @@ def test_pipelined_train_step_bundles_lower_and_compile():
                 ).lower(*tb.abstract_args).compile()
 
 
+# ---------------------------------------------------- staleness weighting
+@pytest.mark.parametrize("name", ["cyclesfl", "psl", "sglr"])
+@pytest.mark.parametrize("weighting", ["inverse", "exp"])
+def test_sync_weighting_is_numerical_noop(name, weighting):
+    """w(0) == 1.0 exactly (1/(1+0) and exp(0) are both the IEEE
+    constant 1.0), so a sync schedule — lag 0 every round — with
+    weighting armed is a numerical no-op across all three ServerUpdate
+    modes.  The inserted traced multiply can still change XLA's fusion
+    choices (reductions reassociate), so the guarantee is tight
+    allclose, not bit equality — bit-for-bit is reserved for
+    ``staleness_weighting='none'``, which keeps the tail's exact
+    historical signature (the sequential goldens above)."""
+    r_plain, _ = _run(_cfg(name, pipeline_depth=1))
+    r_w, res = _run(_cfg(name, pipeline_depth=1,
+                         staleness_weighting=weighting))
+    for i, (ra, rb) in enumerate(zip(r_plain.rows, r_w.rows)):
+        for k in ra:
+            np.testing.assert_allclose(
+                ra[k], rb[k], rtol=1e-5, atol=1e-7,
+                err_msg=f"{name}/{weighting}: round {i} metric {k}")
+    for la, lb in zip(jax.tree.leaves(r_plain.state),
+                      jax.tree.leaves(r_w.state)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-5, atol=1e-7,
+                                   err_msg=f"{name}/{weighting}: state")
+    # the weight itself is reported and is exactly 1.0 every round
+    assert all(float(r["stale_weight"]) == 1.0 for r in r_w.rows)
+
+
+def test_async_weighting_changes_the_numbers():
+    """Sanity that weighting genuinely binds under staleness: a depth-2
+    async run with exp weighting diverges from the unweighted depth-2
+    async run (lags > 0 scale the server/feature gradients)."""
+    r_plain, _ = _run(_cfg("cyclesfl", pipeline_depth=2,
+                           pipeline_staleness="async"))
+    r_w, _ = _run(_cfg("cyclesfl", pipeline_depth=2,
+                       pipeline_staleness="async",
+                       staleness_weighting="exp", staleness_lambda=1.0))
+    same = all(
+        np.array_equal(np.asarray(la), np.asarray(lb))
+        for la, lb in zip(jax.tree.leaves(r_plain.state),
+                          jax.tree.leaves(r_w.state)))
+    assert not same, "staleness weighting changed nothing under lag > 0"
+    # the reported weights follow w = exp(-lag): 1.0 on the lag-0 prime
+    # round, < 1 once the ring is warm
+    ws = [float(r["stale_weight"]) for r in r_w.rows]
+    assert ws[0] == 1.0 and all(w < 1.0 for w in ws[1:])
+
+
 # ---------------------------------------------------------------- config
 def test_pipeline_config_json_roundtrip():
-    cfg = ExperimentConfig(algo="cyclesfl", pipeline_depth=1,
-                           pipeline_staleness="async")
+    cfg = ExperimentConfig(algo="cyclesfl", pipeline_depth=3,
+                           pipeline_staleness="async",
+                           staleness_weighting="exp", staleness_lambda=0.25)
     back = ExperimentConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
     assert back == cfg
 
 
 def test_pipeline_config_validation():
+    # any depth >= 0 is legal now (the staleness window L); negatives
+    # are not
+    ExperimentConfig(pipeline_depth=2).validate()
+    ExperimentConfig(pipeline_depth=7,
+                     pipeline_staleness="async").validate()
     with pytest.raises(ValueError, match="pipeline_depth"):
-        ExperimentConfig(pipeline_depth=2).validate()
+        ExperimentConfig(pipeline_depth=-1).validate()
     with pytest.raises(ValueError, match="pipeline_staleness"):
         ExperimentConfig(pipeline_depth=1,
                          pipeline_staleness="eager").validate()
+    with pytest.raises(ValueError, match="staleness_weighting"):
+        ExperimentConfig(staleness_weighting="linear").validate()
+    with pytest.raises(ValueError, match="staleness_lambda"):
+        ExperimentConfig(staleness_lambda=-0.5).validate()
 
 
 def test_pipeline_flags():
     import argparse
     ap = ExperimentConfig.add_arguments(argparse.ArgumentParser())
-    args = ap.parse_args(["--pipeline-depth", "1",
-                          "--pipeline-staleness", "async"])
+    args = ap.parse_args(["--pipeline-depth", "4",
+                          "--pipeline-staleness", "async",
+                          "--staleness-weighting", "exp",
+                          "--staleness-lambda", "0.25"])
     cfg = ExperimentConfig.from_flags(args)
-    assert cfg.pipeline_depth == 1 and cfg.pipeline_staleness == "async"
+    assert cfg.pipeline_depth == 4 and cfg.pipeline_staleness == "async"
+    assert cfg.staleness_weighting == "exp"
+    assert cfg.staleness_lambda == 0.25

@@ -366,7 +366,8 @@ def _harness_args(ckpt_dir, rounds=6, **kw):
     ns = argparse.Namespace(
         ckpt_dir=ckpt_dir, rounds=rounds, algo="cyclesfl", clients=N,
         attendance=0.25, batch=4, seed=0, resume=False, guard=False,
-        faults="", sleep_per_round=0.0, out=None)
+        faults="", pipeline_depth=0, pipeline_staleness="sync",
+        sleep_per_round=0.0, out=None)
     for k, v in kw.items():
         setattr(ns, k, v)
     return ns
@@ -381,7 +382,7 @@ QUARANTINE_FAULTS = ResilienceConfig(
     faults=FaultConfig(nan_rate=0.6, persist=10))
 
 
-@pytest.mark.parametrize("pipeline", [0, 1])
+@pytest.mark.parametrize("pipeline", [0, 1, 2])
 def test_quarantine_ledger_survives_resume(pipeline, setup, tmp_path):
     """Resume must be behavior-identical UNDER RECOVERY: the quarantine
     ledger, its per-round event history, and the spike-EMA carry are
@@ -415,6 +416,87 @@ def test_quarantine_ledger_survives_resume(pipeline, setup, tmp_path):
     assert fresh.quarantined == eng.recovery.quarantined
     assert fresh.quarantine_history == eng.recovery.quarantine_history
     assert fresh.export_state() == state
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_async_depth_ledger_survives_resume(depth, setup, tmp_path):
+    """The depth-L generalization of the ledger golden for ASYNC
+    schedules.  An async resume re-primes the ring with fresh extracts,
+    so the resumed history is not bit-for-bit by design — but the fault
+    stream is state-independent (deterministic per (round, attempt)),
+    so the quarantine decisions, their event history, and the bounded
+    lag must match the uninterrupted run exactly.  The resumed engine's
+    draw-time ledger offset must equal the ring depth: round r's cohort
+    was drawn L rounds early in the golden run, against the bans known
+    at r - L."""
+    task, fed = setup
+    base = dict(rounds=6, eval_every=3, pipeline_depth=depth,
+                pipeline_staleness="async", resilience=QUARANTINE_FAULTS)
+    _, golden = _run(_cfg(ckpt_dir=str(tmp_path / "g"), **base), task, fed)
+    assert golden["resilience"]["quarantined_clients"], \
+        "fixture must actually quarantine someone"
+    assert golden["pipeline"]["max_theta_s_lag_rounds"] <= depth
+    ck = str(tmp_path / "p")
+    _run(_cfg(ckpt_dir=ck, **{**base, "rounds": 3}), task, fed)
+    eng, resumed = _run(_cfg(ckpt_dir=ck, resume=True, **base), task, fed)
+    assert resumed["resumed_from_round"] == 3
+    assert eng._ledger_offset == depth
+    assert resumed["resilience"]["quarantined_clients"] == \
+        golden["resilience"]["quarantined_clients"]
+    assert resumed["resilience"]["quarantine_events"] == \
+        golden["resilience"]["quarantine_events"]
+    assert resumed["pipeline"]["max_theta_s_lag_rounds"] <= depth
+
+
+def test_sigkill_deep_sync_resume_bit_for_bit(tmp_path):
+    """SIGKILL-resume through the depth-2 sync ring: the subprocess
+    harness runs the pipelined schedule, dies mid-flight, and the
+    resumed history must still match the uninterrupted pipelined run
+    row-for-row (sync at any depth is bit-for-bit sequential, and the
+    checkpoint protocol is oblivious to the ring)."""
+    from repro.resilience import harness
+    ck = str(tmp_path / "ck")
+    golden = harness.build_engine(
+        _harness_args(str(tmp_path / "golden"), pipeline_depth=2)).run()
+    env = dict(os.environ, PYTHONPATH="src")
+    cwd = os.path.dirname(os.path.dirname(__file__))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.resilience.harness",
+         "--ckpt-dir", ck, "--rounds", "6", "--clients", str(N),
+         "--batch", "4", "--pipeline-depth", "2",
+         "--sleep-per-round", "0.5"],
+        env=env, cwd=cwd,
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    try:
+        deadline = time.time() + 180
+        while time.time() < deadline:
+            if latest_step(ck) is not None and latest_step(ck) >= 2:
+                break
+            if proc.poll() is not None:
+                pytest.fail("harness exited before checkpointing")
+            time.sleep(0.05)
+        else:
+            pytest.fail("harness never wrote step_2")
+        os.kill(proc.pid, signal.SIGKILL)
+    finally:
+        proc.wait()
+    killed_at = latest_step(ck)
+    assert killed_at is not None and killed_at < 6
+    out = str(tmp_path / "resumed.json")
+    subprocess.run(
+        [sys.executable, "-m", "repro.resilience.harness",
+         "--ckpt-dir", ck, "--rounds", "6", "--clients", str(N),
+         "--batch", "4", "--pipeline-depth", "2",
+         "--resume", "--out", out],
+        env=env, cwd=cwd, check=True,
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL, timeout=300)
+    resumed = json.load(open(out))
+    assert resumed["resumed_from_round"] == killed_at
+    want = {r["round"]: r for r in _strip(golden["history"])}
+    got = _strip(resumed["history"])
+    assert got, "resumed run produced no history"
+    for row in got:
+        assert row == want[row["round"]], row["round"]
 
 
 def test_resume_without_ledger_metadata_keeps_fresh_controller(

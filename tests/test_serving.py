@@ -275,6 +275,24 @@ def test_closed_loop_loadgen(arch):
     assert row["latency_s"]["p50"] <= row["latency_s"]["p99"]
 
 
+def test_closed_loop_empty_prompts_on_reused_runtime(arch):
+    """Regression: the loadgen used to recover its requests with a tail
+    slice ``results[-len(prompts):]`` — for an EMPTY prompt list that
+    slice is the runtime's whole shared history, so a reused runtime
+    reported the previous call's counts.  Requests are now selected by
+    the ids this call submitted."""
+    rt = ServeRuntime(arch, SC, seed=0)
+    prompts = make_prompts(4, SC.max_prompt_len, arch.vocab, seed=3)
+    warm = run_closed_loop(rt, prompts, concurrency=2)
+    assert warm["by_status"][STATUS_DONE] == 4
+    row = run_closed_loop(rt, [], concurrency=2)
+    assert row["n_requests"] == 0
+    assert all(v == 0 for v in row["by_status"].values()), row["by_status"]
+    assert row["throughput_tok_s"] == 0.0
+    assert row["throughput_req_s"] == 0.0
+    assert row["latency_s"]["p50"] is None
+
+
 def test_mamba2_runtime(arch):
     m = mamba_smoke()
     sc = ServeConfig(slots=2, max_prompt_len=4, max_new_tokens=3,

@@ -67,6 +67,26 @@ def test_schedules_shapes():
     assert float(exp(10)) == pytest.approx(0.5)
 
 
+def test_cosine_edge_cases():
+    # no warmup is fine: decay starts immediately at full lr
+    cos0 = cosine(1.0, warmup=0, total=100)
+    assert float(cos0(0)) == pytest.approx(1.0)
+    assert float(cos0(100)) == pytest.approx(0.1, abs=1e-3)
+    # past the horizon the schedule clamps at the floor, no rebound
+    cos = cosine(1.0, warmup=10, total=100, final_frac=0.1)
+    assert float(cos(100)) == float(cos(250)) == pytest.approx(0.1,
+                                                               abs=1e-3)
+    # regression: total <= warmup used to silently collapse the decay
+    # window to one step (lr cliffed straight to the floor) — it must
+    # be rejected at construction now
+    with pytest.raises(ValueError, match="total"):
+        cosine(1.0, warmup=100, total=100)
+    with pytest.raises(ValueError, match="total"):
+        cosine(1.0, warmup=100, total=50)
+    with pytest.raises(ValueError, match="warmup"):
+        cosine(1.0, warmup=-1, total=50)
+
+
 # ----------------------------------------------------------------- data
 def test_dirichlet_partition_covers_everything(rng):
     labels = rng.integers(0, 10, size=2000)
